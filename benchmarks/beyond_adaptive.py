@@ -1,0 +1,44 @@
+"""Beyond-paper benchmarks: adaptive RLS control under phase change, and
+hierarchical fleet budget control at 1000+ nodes."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.configs.base import PowerControlConfig
+from repro.core.hierarchy import FleetConfig, simulate_fleet
+from repro.core.nrm import NRM, SimulatedPowerActuator
+from repro.core.plant import PROFILES
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    # adaptive vs fixed under 2x gain shift (compute->memory phase change)
+    times = {}
+    for adaptive in (False, True):
+        nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros",
+                                     adaptive=adaptive))
+        shifted = dataclasses.replace(PROFILES["gros"],
+                                      K_L=PROFILES["gros"].K_L * 2)
+        nrm.actuator = SimulatedPowerActuator(shifted, seed=5)
+        tr = nrm.run_simulated(total_work=1500.0, seed=6)
+        times[adaptive] = float(tr["t"][-1])
+    rows.append(("beyond/adaptive_gain_shift", 0.0,
+                 f"fixed_time={times[False]:.0f}s;"
+                 f"adaptive_time={times[True]:.0f}s"))
+
+    # fleet: budget adherence + straggler mitigation at scale
+    for n in (64, 1024):
+        prof = PROFILES["dahu"]
+        peak = float(prof.power_of_pcap(prof.pcap_max)) * n
+        fc = FleetConfig(n_nodes=n, epsilon=0.1, power_budget=0.7 * peak)
+        us, tr = timed(lambda: simulate_fleet(prof, fc, steps=60, seed=0),
+                       reps=1)
+        power = np.asarray(tr["power"])[20:].mean()
+        rows.append((f"beyond/fleet_{n}", us,
+                     f"power={power/1e3:.1f}kW;budget={0.7*peak/1e3:.1f}kW;"
+                     f"median_progress="
+                     f"{float(np.asarray(tr['progress_med'])[20:].mean()):.1f}Hz"))
+    return rows

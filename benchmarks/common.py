@@ -1,0 +1,36 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plant import PROFILES, simulate
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def timed(fn: Callable, *args, reps: int = 3) -> Tuple[float, object]:
+    fn(*args)  # warm
+    t0 = time.time()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def static_campaign(profile, levels=9, reps=3, steps=40, seed=1):
+    """Constant-cap campaign -> (caps, mean power, mean progress) arrays."""
+    key = jax.random.PRNGKey(seed)
+    caps, powers, progs = [], [], []
+    for pcap in np.linspace(profile.pcap_min, profile.pcap_max, levels):
+        for _ in range(reps):
+            key, k = jax.random.split(key)
+            tr = simulate(profile, jnp.full((steps,), float(pcap)), 1.0, k)
+            caps.append(float(pcap))
+            powers.append(float(np.mean(tr["power"][5:])))
+            progs.append(float(np.mean(tr["progress"][5:])))
+    return np.asarray(caps), np.asarray(powers), np.asarray(progs)

@@ -1,0 +1,46 @@
+"""Fig. 3: staircase powercap sweep — the open-loop system analysis.
+
+Reproduces: progress follows power; saturation at high caps (memory-bound);
+RAPL actuator error grows with the cap; multi-socket clusters are noisier;
+yeti shows exogenous drops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core.plant import PROFILES, simulate
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    hold = 20  # seconds per staircase level
+    levels = np.arange(40.0, 121.0, 20.0)
+    sched = jnp.asarray(np.repeat(levels, hold), jnp.float32)
+    for name in ("gros", "dahu", "yeti"):
+        p = PROFILES[name]
+        us, tr = timed(lambda: simulate(p, sched, 1.0,
+                                        jax.random.PRNGKey(3)))
+        prog = np.asarray(tr["progress"])
+        power = np.asarray(tr["power"])
+        # marginal progress gain of the last staircase step vs the first
+        # (median per segment: robust to yeti's exogenous drop events)
+        seg = lambda i: float(np.median(prog[i * hold + 5:(i + 1) * hold]))
+        gain_lo = seg(1) - seg(0)
+        gain_hi = seg(len(levels) - 1) - seg(len(levels) - 2)
+        sat = gain_hi / max(gain_lo, 1e-9)
+        err120 = 120.0 - power[-hold:].mean()  # actuator error at 120 W
+        noise = float(np.std(prog[-hold:]))
+        rows.append((f"fig3/{name}", us,
+                     f"saturation_ratio={sat:.3f};actuator_err_120W="
+                     f"{err120:.1f}W;noise_sd={noise:.2f}Hz"))
+        if name in ("gros", "dahu"):  # yeti: drops dominate (paper §5.2)
+            assert sat < 0.5, "high-power saturation must be visible"
+    # yeti drops: minimum progress near the 10 Hz floor
+    p = PROFILES["yeti"]
+    tr = simulate(p, jnp.full((300,), 110.0), 1.0, jax.random.PRNGKey(5))
+    rows.append(("fig3/yeti_drops", 0.0,
+                 f"min_progress={float(np.min(np.asarray(tr['progress']))):.1f}Hz"))
+    return rows

@@ -1,0 +1,72 @@
+"""Fig. 7: execution time vs energy across degradation levels (the paper's
+headline result: eps=0.1 on gros ~22% energy saved for ~7% slowdown;
+eps > 0.15 not worth it; yeti too noisy)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.configs.base import PowerControlConfig
+from repro.core.energy import (RunSummary, pareto_front, tradeoff_table)
+from repro.core.nrm import NRM
+
+
+EPS_GRID = (0.0, 0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5)
+
+
+def run(quick: bool = True):
+    rows: list[Row] = []
+    reps = 3 if quick else 30
+    for name in ("gros", "dahu"):
+        runs = []
+        pts = []
+        # uncontrolled full-power baseline (the paper's eps=0 behaves like
+        # this: noise keeps the error positive and the cap wound to max;
+        # our symmetric-noise sim lets the eps=0 controller settle slightly
+        # below max, so we measure both baselines)
+        import jax
+        import jax.numpy as jnp
+        import numpy as _np
+        from repro.core.plant import PROFILES, simulate
+        p = PROFILES[name]
+        base_t, base_e = [], []
+        for seed in range(reps):
+            tr0 = simulate(p, jnp.full((2000,), p.pcap_max), 1.0,
+                           jax.random.PRNGKey(seed))
+            work = _np.cumsum(_np.asarray(tr0["progress"]))
+            idx = int(_np.searchsorted(work, 6000.0))
+            base_t.append(float(idx))
+            base_e.append(float(p.power_of_pcap(p.pcap_max)) * idx)
+        t_max, e_max = _np.mean(base_t), _np.mean(base_e)
+        for eps in EPS_GRID if not quick else (0.0, 0.05, 0.1, 0.15, 0.3):
+            for seed in range(reps):
+                nrm = NRM(PowerControlConfig(epsilon=eps,
+                                             plant_profile=name))
+                # long runs (paper: 10k iterations) so the initial descent
+                # transient does not dilute steady-state savings
+                tr = nrm.run_simulated(total_work=6000.0, seed=seed,
+                                       max_time=7200.0)
+                runs.append(RunSummary(
+                    epsilon=eps, exec_time=float(tr["t"][-1]),
+                    energy=float(tr["energy"][-1]),
+                    mean_progress=float(tr["progress"].mean()),
+                    mean_power=float(tr["power"].mean())))
+                pts.append((runs[-1].exec_time, runs[-1].energy))
+        table = tradeoff_table(runs)
+        front = pareto_front(pts)
+        t10 = table.get(0.1, {})
+        save_vs_max = 1.0 - t10.get("energy_j", e_max) / e_max
+        slow_vs_max = t10.get("time_s", t_max) / t_max - 1.0
+        rows.append((
+            f"fig7/{name}", 0.0,
+            f"eps0.1_vs_maxpower:energy_saving={save_vs_max:.1%},"
+            f"time_increase={slow_vs_max:.1%};"
+            f"eps0.1_vs_eps0ctrl:energy_saving="
+            f"{t10.get('energy_saving', 0):.1%},"
+            f"time_increase={t10.get('time_increase', 0):.1%};"
+            f"front_size={len(front)}"))
+        # trade-off direction must hold
+        eps_keys = sorted(table)
+        assert table[eps_keys[-1]]["energy_saving"] \
+            >= table[eps_keys[1]]["energy_saving"] - 0.05
+    return rows

@@ -1,0 +1,91 @@
+"""Perf-iteration runner: re-lower a cell, diff roofline terms vs baseline.
+
+Each §Perf iteration: (1) baseline numbers come from the frozen
+``experiments/dryrun/*__cost.json`` + ``*__full.json`` artifacts; (2) after
+a code/config change, re-run the cell here; (3) the tool prints
+before/after per term and appends a JSON record under
+``experiments/perf/<tag>.json``.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.perf_iterate --arch llama3-405b \
+      --shape decode_32k --tag grouped_gqa [--artifact cost|full|both]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+PERF_DIR = ROOT / "experiments" / "perf"
+BASE_DIR = ROOT / "experiments" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def terms_from_cost(rec):
+    return {
+        "compute_s": rec["total_flops"] / PEAK_FLOPS,
+        "memory_s": rec["total_bytes"] / HBM_BW,
+        "collective_s": rec["total_collective_link_bytes"] / ICI_BW,
+    }
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--tag", required=True)
+    p.add_argument("--artifact", default="cost", choices=("cost", "full",
+                                                          "both"))
+    p.add_argument("--multi-pod", action="store_true")
+    args = p.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    mesh = "2x16x16" if args.multi_pod else "16x16"
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+
+    arts = ["cost", "full"] if args.artifact == "both" else [args.artifact]
+    out = {"arch": args.arch, "shape": args.shape, "mesh": mesh,
+           "tag": args.tag}
+    for art in arts:
+        res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       artifact=art)
+        base_f = BASE_DIR / f"{args.arch}__{args.shape}__{mesh}__{art}.json"
+        base = json.loads(base_f.read_text()) if base_f.exists() else None
+        if art == "cost":
+            after = terms_from_cost(res)
+            out["after_terms"] = after
+            out["after_raw"] = {k: res[k] for k in
+                                ("total_flops", "total_bytes",
+                                 "total_collective_link_bytes")}
+            if base:
+                before = terms_from_cost(base)
+                out["before_terms"] = before
+                print("\n=== roofline terms (s/chip) ===")
+                for k in before:
+                    delta = (after[k] / before[k] - 1.0) if before[k] else 0.0
+                    print(f"{k:14s} before={before[k]:10.4f} "
+                          f"after={after[k]:10.4f}  ({delta:+.1%})")
+        else:
+            ma = res.get("memory_analysis", {})
+            out["after_memory"] = ma
+            if base:
+                bma = base.get("memory_analysis", {})
+                out["before_memory"] = bma
+                for k in ("argument_size_in_bytes", "temp_size_in_bytes"):
+                    b, a = bma.get(k, 0) / 2**30, ma.get(k, 0) / 2**30
+                    print(f"{k:28s} before={b:8.2f}GiB after={a:8.2f}GiB")
+            out["after_collectives"] = res.get("collectives_summary")
+            if base:
+                print("colls before:", base.get("collectives_summary"))
+                print("colls after :", res.get("collectives_summary"))
+    (PERF_DIR / f"{args.arch}__{args.shape}__{mesh}__{args.tag}.json"
+     ).write_text(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Roofline analysis from dry-run artifacts (assignment deliverable g).
+
+Inputs: ``experiments/dryrun/*__cost.json`` (unrolled 1-unit/2-unit
+lowerings, differenced per layer and scaled by depth — XLA counts While
+bodies once, so the scanned full artifact undercounts) and
+``*__full.json`` (memory analysis + collective schedule).
+
+Terms per (arch x shape), single-pod mesh, per chip:
+
+  compute_s    = HLO_flops_per_chip / 197e12        (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_chip / 819e9         (HBM bw)
+  collective_s = link_bytes_per_chip / 50e9         (one ICI link, ring
+                  algorithm factors applied per op; conservative — a 2D
+                  torus axis ring can stripe 2-3 links)
+
+Post-SPMD HLO is the per-device program, so cost_analysis numbers are
+already per chip. MODEL_FLOPS = ideal step flops (6*N_active*D for train,
+2*N_active*D + causal attention for prefill/decode); the ratio
+MODEL_FLOPS/HLO_flops exposes remat recompute, dispatch one-hots and
+non-causal blocked-attention waste.
+
+xLSTM correction: the sLSTM time scan stays a While even in the cost
+artifact; its per-step flops are added analytically (flagged in the output).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs import applicable_shapes, get_config, get_shape, list_archs
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT_CSV = Path(__file__).resolve().parents[1] / "experiments" / "roofline.csv"
+
+
+# ---------------------------------------------------------------------------
+# Ideal model FLOPs (global, fwd(+bwd) per step)
+# ---------------------------------------------------------------------------
+
+
+def attn_kv_len(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    w = cfg.attn.sliding_window
+    if shape.mode == "decode":
+        T = shape.seq_len
+        return min(w, T) if w else T
+    S = shape.seq_len
+    return min(w, S) if w else S / 2.0  # causal average
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for b in cfg.pattern if b.kind == "attn") * cfg.num_repeats
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    N = cfg.active_param_count()
+    a = cfg.attn
+    L_attn = n_attn_layers(cfg)
+    kv = attn_kv_len(cfg, shape)
+    if shape.mode == "train":
+        D = shape.tokens
+        matmul = 6.0 * N * D
+        attn = 3.0 * 4.0 * shape.global_batch * a.num_heads * \
+            shape.seq_len * kv * a.head_dim * L_attn
+        return matmul + attn
+    if shape.mode == "prefill":
+        D = shape.tokens
+        matmul = 2.0 * N * D
+        attn = 4.0 * shape.global_batch * a.num_heads * shape.seq_len * kv \
+            * a.head_dim * L_attn
+        return matmul + attn
+    # decode: one token
+    matmul = 2.0 * N * shape.global_batch
+    attn = 4.0 * shape.global_batch * a.num_heads * kv * a.head_dim * L_attn
+    return matmul + attn
+
+
+def slstm_correction(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Per-chip flops the While-hidden sLSTM recurrence contributes."""
+    if not cfg.xlstm:
+        return 0.0
+    n_sl = sum(1 for b in cfg.pattern if b.kind == "slstm") * cfg.num_repeats
+    if n_sl == 0 or shape.mode == "decode":
+        return 0.0
+    D = cfg.d_model
+    per_step = 2.0 * D * 4 * D  # recurrent gate matmul h @ w_h
+    mult = 3.0 if shape.mode == "train" else 1.0
+    total = mult * per_step * shape.tokens * n_sl
+    return total / CHIPS
+
+
+# ---------------------------------------------------------------------------
+# Table assembly
+# ---------------------------------------------------------------------------
+
+
+def load_cell(arch: str, shape: str, artifact: str,
+              mesh: str = "16x16") -> Optional[dict]:
+    f = DRYRUN_DIR / f"{arch}__{shape}__{mesh}__{artifact}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def cell_terms(arch: str, shape_name: str) -> Optional[Dict]:
+    cost = load_cell(arch, shape_name, "cost")
+    full = load_cell(arch, shape_name, "full")
+    if cost is None:
+        return None
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    flops_dev = cost["total_flops"] + slstm_correction(cfg, shape)
+    bytes_dev = cost["total_bytes"]
+    coll_dev = cost["total_collective_link_bytes"]
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(cfg, shape) / CHIPS
+    useful = mf / max(flops_dev, 1e-9)
+    # roofline fraction: ideal-compute time over the achievable step time
+    # (sum of the dominant term with perfect overlap of the other two)
+    ideal_s = mf / PEAK_FLOPS
+    frac = ideal_s / max(bound, 1e-12)
+    row = {
+        "arch": arch,
+        "shape": shape_name,
+        "flops_per_chip": flops_dev,
+        "bytes_per_chip": bytes_dev,
+        "coll_bytes_per_chip": coll_dev,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flops_ratio": round(useful, 4),
+        "roofline_fraction": round(frac, 4),
+        "slstm_corrected": cfg.xlstm is not None,
+    }
+    if full is not None:
+        ma = full.get("memory_analysis", {})
+        row["hbm_args_gb"] = round(ma.get("argument_size_in_bytes", 0)
+                                   / 2**30, 2)
+        row["hbm_temp_gb"] = round(ma.get("temp_size_in_bytes", 0)
+                                   / 2**30, 2)
+    return row
+
+
+def build_table() -> list:
+    rows = []
+    for arch in list_archs():
+        for shape in applicable_shapes(get_config(arch)):
+            row = cell_terms(arch, shape.name)
+            if row is not None:
+                rows.append(row)
+    return rows
+
+
+def write_csv(rows: list) -> None:
+    if not rows:
+        return
+    OUT_CSV.parent.mkdir(parents=True, exist_ok=True)
+    cols = list(rows[0].keys())
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    OUT_CSV.write_text("\n".join(lines) + "\n")
+
+
+def run(quick: bool = True):
+    rows = build_table()
+    write_csv(rows)
+    out = []
+    for r in rows:
+        out.append((
+            f"roofline/{r['arch']}x{r['shape']}", 0.0,
+            f"bottleneck={r['bottleneck']};compute={r['compute_s']:.4f}s;"
+            f"memory={r['memory_s']:.4f}s;collective="
+            f"{r['collective_s']:.4f}s;useful={r['useful_flops_ratio']:.2f};"
+            f"roofline_frac={r['roofline_fraction']:.3f}"))
+    if not out:
+        out.append(("roofline/missing", 0.0,
+                    "run `python -m repro.launch.dryrun --all --artifact "
+                    "cost` first"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

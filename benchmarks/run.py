@@ -1,0 +1,49 @@
+"""Benchmark entrypoint: one module per paper table/figure + beyond-paper
++ roofline. Prints ``name,us_per_call,derived`` CSV per row.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale repetition counts (slower)")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    from benchmarks import (beyond_adaptive, fig3_system_analysis,
+                            fig4_static, fig5_dynamics, fig6_control,
+                            fig7_pareto, roofline)
+    modules = {
+        "fig3": fig3_system_analysis,
+        "fig4": fig4_static,
+        "fig5": fig5_dynamics,
+        "fig6": fig6_control,
+        "fig7": fig7_pareto,
+        "beyond": beyond_adaptive,
+        "roofline": roofline,
+    }
+    failed = False
+    print("name,us_per_call,derived")
+    for key, mod in modules.items():
+        if args.only and key != args.only:
+            continue
+        try:
+            for name, us, derived in mod.run(quick=not args.full):
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            failed = True
+            traceback.print_exc()
+            print(f"{key}/FAILED,0,error")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

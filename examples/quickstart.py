@@ -1,0 +1,59 @@
+"""Quickstart: the paper's control loop in 60 lines.
+
+1. Identify a cluster plant (static characterization, Table 2 recovery).
+2. Design the PI controller by pole placement.
+3. Run closed-loop: hold progress at (1-eps) of max while saving energy.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PROFILES, PIGains, fit_static, pi_init, pi_step,
+                        plant_init, plant_step, simulate)
+
+
+def main():
+    prof = PROFILES["gros"]
+
+    # --- 1. static characterization (constant-cap campaign, Fig. 4) -----
+    caps, powers, progress = [], [], []
+    key = jax.random.PRNGKey(0)
+    for pcap in np.linspace(prof.pcap_min, prof.pcap_max, 9):
+        key, k = jax.random.split(key)
+        tr = simulate(prof, jnp.full((40,), float(pcap)), 1.0, k)
+        caps.append(pcap)
+        powers.append(float(np.mean(tr["power"][5:])))
+        progress.append(float(np.mean(tr["progress"][5:])))
+    fit = fit_static(caps, powers, progress)
+    print(f"identified: a={fit.a:.2f} b={fit.b:.1f} K_L={fit.K_L:.1f} "
+          f"alpha={fit.alpha:.3f} beta={fit.beta:.1f} (R2={fit.r2:.3f})")
+
+    # --- 2. controller design (pole placement, eps = 10%) ----------------
+    eps = 0.10
+    gains = PIGains.from_model(prof, epsilon=eps, tau_obj=10.0)
+    print(f"PI gains: K_P={gains.k_p:.2e} K_I={gains.k_i:.2e} "
+          f"setpoint={gains.setpoint:.1f} Hz")
+
+    # --- 3. closed loop ---------------------------------------------------
+    ps, cs = plant_init(prof), pi_init(gains)
+    pcap = prof.pcap_max
+    energy_ctrl = 0.0
+    for i in range(60):
+        key, k = jax.random.split(key)
+        ps, meas = plant_step(prof, ps, pcap, 1.0, k)
+        cs, pcap = pi_step(gains, cs, meas["progress"], 1.0)
+        energy_ctrl += float(meas["power"])
+        if i % 10 == 0:
+            print(f"  t={i:3d}s progress={float(meas['progress']):6.2f} "
+                  f"pcap={float(pcap):6.1f} W")
+    base_power = prof.power_of_pcap(prof.pcap_max) * 60
+    print(f"energy: controlled={energy_ctrl:.0f} J vs full-power="
+          f"{float(base_power):.0f} J "
+          f"({100 * (1 - energy_ctrl / float(base_power)):.1f}% saved at "
+          f"eps={eps:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Paper core: control-theoretic power regulation (Cerf et al., 2021)."""
+from repro.core.controller import (PIController, PIGains, PIState, pi_init,  # noqa: F401
+                                   pi_step)
+from repro.core.identify import (StaticFit, fit_dynamics, fit_rapl,  # noqa: F401
+                                 fit_static, pearson)
+from repro.core.nrm import NRM, PowerActuator, SimulatedPowerActuator  # noqa: F401
+from repro.core.plant import (PROFILES, PlantProfile, PlantState,  # noqa: F401
+                              pcap_linearize, plant_init, plant_step,
+                              simulate)
+from repro.core.signals import HeartbeatAggregator, progress_from_times  # noqa: F401

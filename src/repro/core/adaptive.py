@@ -1,0 +1,73 @@
+"""Adaptive control (beyond the paper; its §5.2 'natural direction').
+
+The paper's PI gains are fixed by the offline-identified (K_L, tau). Under
+phase changes (compute-bound <-> memory-bound) the true static gain drifts
+and fixed gains become too aggressive or too sluggish. We close that gap
+with recursive least squares (RLS, forgetting factor lambda) on the
+first-order model in the *linearized* coordinates:
+
+    progress_L[i+1] = theta1 * pcap_L[i] + theta2 * progress_L[i]
+
+which gives online estimates tau_hat = dt*theta2/(1-theta2) and
+K_L_hat = theta1*(dt+tau_hat)/dt; the PI gains are re-placed each period
+(gain scheduling) with clamping and a dwell time to avoid chattering.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.controller import PIGains
+from repro.core.plant import PlantProfile
+
+
+@dataclasses.dataclass
+class RLSAdapter:
+    gains0: PIGains
+    profile: PlantProfile
+    lam: float = 0.995          # forgetting factor
+    dwell: int = 5              # min periods between gain updates
+    kl_clamp: float = 4.0       # K_L_hat within [K_L/c, K_L*c]
+
+    def __post_init__(self):
+        self.theta = np.array([self.profile.K_L * 0.5, 0.5])
+        self.P = np.eye(2) * 1e2
+        self._prev: tuple | None = None
+        self._since_update = 0
+        self.tau_hat = self.profile.tau
+        self.kl_hat = self.profile.K_L
+
+    def update(self, gains: PIGains, progress: float, pcap_l: float,
+               dt: float) -> PIGains:
+        y = progress - self.profile.K_L  # progress_L
+        if self._prev is not None:
+            phi = np.array(self._prev)  # [pcap_L, progress_L] at i-1
+            err = y - phi @ self.theta
+            denom = self.lam + phi @ self.P @ phi
+            k = (self.P @ phi) / denom
+            self.theta = self.theta + k * err
+            self.P = (self.P - np.outer(k, phi @ self.P)) / self.lam
+        self._prev = (pcap_l, y)
+
+        th1, th2 = self.theta
+        th2 = float(np.clip(th2, 1e-3, 1 - 1e-3))
+        tau_hat = dt * th2 / (1.0 - th2)
+        kl_hat = th1 * (dt + tau_hat) / dt
+        lo, hi = (self.profile.K_L / self.kl_clamp,
+                  self.profile.K_L * self.kl_clamp)
+        kl_hat = float(np.clip(kl_hat, lo, hi))
+        self.tau_hat, self.kl_hat = tau_hat, kl_hat
+
+        self._since_update += 1
+        if self._since_update < self.dwell:
+            return gains
+        self._since_update = 0
+        # re-place poles with the adapted model, keep tau_obj implied by the
+        # original design: tau_obj = 1 / (K_L0 * K_I0)
+        tau_obj = 1.0 / (self.profile.K_L * self.gains0.k_i)
+        return dataclasses.replace(
+            gains,
+            k_p=tau_hat / (kl_hat * tau_obj),
+            k_i=1.0 / (kl_hat * tau_obj),
+        )

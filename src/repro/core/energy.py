@@ -1,0 +1,67 @@
+"""Energy accounting + time/energy Pareto analysis (paper §5.2, Fig. 7)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSummary:
+    epsilon: float
+    exec_time: float  # [s]
+    energy: float     # [J]
+    mean_progress: float
+    mean_power: float
+
+
+def summarize_run(epsilon: float, dt: float, progress: np.ndarray,
+                  power: np.ndarray, completed_work: float | None = None,
+                  total_work: float | None = None) -> RunSummary:
+    progress = np.asarray(progress)
+    power = np.asarray(power)
+    exec_time = dt * len(progress)
+    return RunSummary(
+        epsilon=float(epsilon),
+        exec_time=float(exec_time),
+        energy=float(np.sum(power) * dt),
+        mean_progress=float(progress.mean()),
+        mean_power=float(power.mean()),
+    )
+
+
+def pareto_front(points: Sequence[Tuple[float, float]]) -> List[int]:
+    """Indices of the non-dominated (time, energy) points (min-min)."""
+    idx = sorted(range(len(points)), key=lambda i: points[i])
+    front: List[int] = []
+    best_energy = float("inf")
+    for i in idx:
+        t, e = points[i]
+        if e < best_energy - 1e-12:
+            front.append(i)
+            best_energy = e
+    return front
+
+
+def tradeoff_table(runs: Sequence[RunSummary]) -> Dict[float, dict]:
+    """Per-epsilon mean time/energy, normalized to the eps=0 baseline."""
+    by_eps: Dict[float, List[RunSummary]] = {}
+    for r in runs:
+        by_eps.setdefault(r.epsilon, []).append(r)
+    base = by_eps.get(0.0) or by_eps[min(by_eps)]
+    t0 = float(np.mean([r.exec_time for r in base]))
+    e0 = float(np.mean([r.energy for r in base]))
+    out = {}
+    for eps in sorted(by_eps):
+        rs = by_eps[eps]
+        t = float(np.mean([r.exec_time for r in rs]))
+        e = float(np.mean([r.energy for r in rs]))
+        out[eps] = {
+            "time_s": t,
+            "energy_j": e,
+            "time_increase": t / t0 - 1.0,
+            "energy_saving": 1.0 - e / e0,
+            "n": len(rs),
+        }
+    return out

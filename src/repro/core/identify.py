@@ -1,0 +1,121 @@
+"""System identification (paper §4.4): static NLS fit + dynamic tau fit.
+
+Static characteristic. Given per-run (pcap, mean power, mean progress):
+1. (a, b) by ordinary least squares on power = a*pcap + b (RAPL accuracy).
+2. (K_L, alpha, beta) by Gauss–Newton on
+       progress = K_L * (1 - exp(-alpha * (power - beta)))
+   run in (log K_L, log alpha, beta) coordinates with a line search —
+   matches the paper's "nonlinear least squares" (Table 2, R^2 0.83–0.95).
+
+Dynamics. Given a random-cap trace, Eq. 3 is linear in (c1, c2):
+    progress_L[i+1] = c1 * pcap_L[i] + c2 * progress_L[i]
+solved in closed form; tau = dt * c2 / (1 - c2), and the static gain is
+cross-checked as K_L = c1 (dt + tau) / dt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticFit:
+    a: float
+    b: float
+    K_L: float
+    alpha: float
+    beta: float
+    r2: float
+
+
+def pearson(x, y) -> float:
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    xc = x - x.mean()
+    yc = y - y.mean()
+    denom = jnp.sqrt(jnp.sum(xc * xc) * jnp.sum(yc * yc))
+    return float(jnp.sum(xc * yc) / jnp.maximum(denom, 1e-12))
+
+
+def fit_rapl(pcap, power) -> Tuple[float, float]:
+    """OLS power = a*pcap + b."""
+    pcap = np.asarray(pcap, np.float64)
+    power = np.asarray(power, np.float64)
+    A = np.stack([pcap, np.ones_like(pcap)], axis=1)
+    (a, b), *_ = np.linalg.lstsq(A, power, rcond=None)
+    return float(a), float(b)
+
+
+def _static_model(params, power):
+    log_kl, log_alpha, beta = params
+    return jnp.exp(log_kl) * (1.0 - jnp.exp(-jnp.exp(log_alpha)
+                                            * (power - beta)))
+
+
+def _residual(params, power, progress):
+    return _static_model(params, power) - progress
+
+
+def fit_static(pcap, power, progress, iters: int = 200) -> StaticFit:
+    """Full §4.4 static fit: RAPL line + Gauss–Newton NLS on the knee."""
+    a, b = fit_rapl(pcap, power)
+    power = jnp.asarray(power, jnp.float32)
+    progress = jnp.asarray(progress, jnp.float32)
+
+    # init: K_L ~ max progress, beta ~ just below min power, alpha from the
+    # half-rise point
+    kl0 = float(progress.max()) * 1.05 + 1e-3
+    beta0 = float(power.min()) - 1.0
+    half = kl0 / 2.0
+    idx = int(jnp.argmin(jnp.abs(progress - half)))
+    dp = max(float(power[idx]) - beta0, 1.0)
+    alpha0 = float(np.log(2.0) / dp)
+    params = jnp.array([np.log(kl0), np.log(alpha0), beta0], jnp.float32)
+
+    jac_fn = jax.jacobian(_residual)
+
+    def gn_step(params, _):
+        r = _residual(params, power, progress)
+        J = jac_fn(params, power, progress)
+        JtJ = J.T @ J + 1e-6 * jnp.eye(3)
+        delta = jnp.linalg.solve(JtJ, J.T @ r)
+
+        def try_step(lam):
+            cand = params - lam * delta
+            return cand, jnp.sum(_residual(cand, power, progress) ** 2)
+
+        lams = jnp.array([1.0, 0.5, 0.25, 0.1, 0.03])
+        cands, losses = jax.vmap(try_step)(lams)
+        best = jnp.argmin(losses)
+        return cands[best], None
+
+    params, _ = jax.lax.scan(gn_step, params, None, length=iters)
+    pred = _static_model(params, power)
+    ss_res = float(jnp.sum((progress - pred) ** 2))
+    ss_tot = float(jnp.sum((progress - progress.mean()) ** 2))
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+    log_kl, log_alpha, beta = (float(v) for v in params)
+    return StaticFit(a=a, b=b, K_L=float(np.exp(log_kl)),
+                     alpha=float(np.exp(log_alpha)), beta=beta, r2=r2)
+
+
+def fit_dynamics(pcap_l, progress_l, dt: float) -> Tuple[float, float]:
+    """Closed-form Eq. 3 fit. Returns (tau, K_L_dynamic).
+
+    Convention: ``progress_l[i]`` is the state measured AFTER ``pcap_l[i]``
+    was applied for one period (what a synchronous monitoring loop records),
+    so the transition is  progress_l[i] = c1*pcap_l[i] + c2*progress_l[i-1].
+    """
+    pl = np.asarray(pcap_l, np.float64)[1:]
+    y_now = np.asarray(progress_l, np.float64)[:-1]
+    y_next = np.asarray(progress_l, np.float64)[1:]
+    A = np.stack([pl, y_now], axis=1)
+    (c1, c2), *_ = np.linalg.lstsq(A, y_next, rcond=None)
+    c2 = min(max(float(c2), 1e-6), 1.0 - 1e-6)
+    tau = dt * c2 / (1.0 - c2)
+    k_l = float(c1) * (dt + tau) / dt
+    return float(tau), k_l

@@ -1,0 +1,190 @@
+"""Node Resource Manager (Argo-NRM analogue, in-process).
+
+The paper's NRM is a daemon mediating sensors (heartbeats, RAPL energy) and
+actuators (RAPL powercap) over Unix sockets. Here the same roles are played
+in-process so the controller runs inside the training loop:
+
+* sensors   — `HeartbeatAggregator` fed by the workload (training step
+  callback or a simulated plant), plus a power sensor.
+* actuators — `PowerActuator` interface; `SimulatedPowerActuator` drives a
+  `repro.core.plant` plant; on real hardware this class binds to the
+  platform power interface (RAPL msr / TPU host power knob).
+* the loop  — `NRM.control_step()` aggregates progress (Eq. 1), runs the PI
+  controller (Eq. 4) and actuates; `NRM.run()` drives a full simulated
+  execution (used by the paper-reproduction benchmarks).
+
+Controller state is part of the run state and is checkpointed with the run
+(see repro.checkpoint), so power control survives restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import PowerControlConfig
+from repro.core.controller import PIController, PIGains
+from repro.core.plant import PROFILES, PlantProfile, plant_init, plant_step
+from repro.core.signals import HeartbeatAggregator
+
+
+class PowerActuator:
+    """Actuator interface: set a power cap, read back measured power."""
+
+    def set_pcap(self, pcap: float) -> None:
+        raise NotImplementedError
+
+    def read_power(self) -> float:
+        raise NotImplementedError
+
+
+class SimulatedPowerActuator(PowerActuator):
+    """Drives a simulated plant; advances plant state each control period."""
+
+    def __init__(self, profile: PlantProfile, seed: int = 0):
+        self.profile = profile
+        self.state = plant_init(profile)
+        self._key = jax.random.PRNGKey(seed)
+        self._pcap = profile.pcap_max
+        self._last_meas: Dict[str, float] = {}
+        self._step = jax.jit(
+            lambda s, pcap, dt, k: plant_step(profile, s, pcap, dt, k))
+
+    def set_pcap(self, pcap: float) -> None:
+        self._pcap = float(np.clip(pcap, self.profile.pcap_min,
+                                   self.profile.pcap_max))
+
+    def advance(self, dt: float) -> Dict[str, float]:
+        self._key, k = jax.random.split(self._key)
+        self.state, meas = self._step(self.state, self._pcap, dt, k)
+        self._last_meas = {k_: float(v) for k_, v in meas.items()}
+        return self._last_meas
+
+    def read_power(self) -> float:
+        return self._last_meas.get("power", float("nan"))
+
+
+@dataclasses.dataclass
+class ControlRecord:
+    t: float
+    progress: float
+    pcap: float
+    power: float
+    setpoint: float
+
+
+class NRM:
+    """Sensor/actuator registry + synchronous control loop."""
+
+    def __init__(self, pc_cfg: PowerControlConfig,
+                 actuator: Optional[PowerActuator] = None,
+                 profile: Optional[PlantProfile] = None):
+        self.cfg = pc_cfg
+        self.profile = profile or PROFILES[pc_cfg.plant_profile]
+        self.actuator = actuator or SimulatedPowerActuator(self.profile)
+        self.gains = PIGains.from_model(self.profile, pc_cfg.epsilon,
+                                        pc_cfg.tau_obj)
+        self.controller = PIController(self.gains)
+        self.hb = HeartbeatAggregator()
+        self.records: List[ControlRecord] = []
+        self._t = 0.0
+        self._adaptive = None
+        if pc_cfg.adaptive:
+            from repro.core.adaptive import RLSAdapter
+            self._adaptive = RLSAdapter(self.gains, self.profile)
+
+    # ---- workload-facing API ---------------------------------------------
+    def heartbeat(self, work: float = 1.0, t: Optional[float] = None) -> None:
+        self.hb.beat(self._t if t is None else t, work)
+
+    def calibrate(self, full_power_rate: float) -> None:
+        """Rescale the plant's linear gain so progress_max matches the
+        measured full-power heart-rate of THIS workload (the paper does this
+        implicitly by identifying each benchmark separately)."""
+        frac_max = self.profile.progress_max / self.profile.K_L
+        new_kl = full_power_rate / max(frac_max, 1e-9)
+        self.profile = dataclasses.replace(self.profile, K_L=new_kl)
+        if isinstance(self.actuator, SimulatedPowerActuator):
+            # rebuild: the actuator jit-closes over the profile
+            self.actuator = SimulatedPowerActuator(self.profile)
+        self.gains = PIGains.from_model(self.profile, self.cfg.epsilon,
+                                        self.cfg.tau_obj)
+        self.controller = PIController(self.gains)
+
+    # ---- control loop -----------------------------------------------------
+    def control_step(self, dt: Optional[float] = None,
+                     now: Optional[float] = None) -> ControlRecord:
+        """One PI period. Pass ``now`` when an external clock (the training
+        loop's simulated time) drives the schedule; dt is then derived."""
+        if now is not None:
+            if dt is None:
+                dt = max(now - self._t, 1e-6)
+            self._t = now
+        else:
+            dt = dt or self.cfg.sampling_period
+            self._t += dt
+        progress = self.hb.progress(self._t)
+        if self._adaptive is not None:
+            self.controller.gains = self._adaptive.update(
+                self.controller.gains, progress,
+                float(self.controller.state.prev_pcap_l), dt)
+        pcap = self.controller.step(progress, dt)
+        self.actuator.set_pcap(pcap)
+        rec = ControlRecord(t=self._t, progress=progress, pcap=pcap,
+                            power=self.actuator.read_power(),
+                            setpoint=float(self.gains.setpoint))
+        self.records.append(rec)
+        return rec
+
+    # ---- full simulated run (paper evaluation setup) -----------------------
+    def run_simulated(self, total_work: float, max_time: float = 3600.0,
+                      seed: int = 0) -> Dict[str, np.ndarray]:
+        """Closed loop against the simulated plant until work completes."""
+        assert isinstance(self.actuator, SimulatedPowerActuator)
+        rng = np.random.default_rng(seed)
+        dt = self.cfg.sampling_period
+        traces = {"t": [], "progress": [], "pcap": [], "power": [],
+                  "energy": [], "work": []}
+        t = 0.0
+        while t < max_time:
+            meas = self.actuator.advance(dt)
+            t += dt
+            self._t = t
+            # synthesize heartbeats for this period at the measured rate
+            n = max(0, int(rng.poisson(max(meas["progress"], 0.0) * dt)))
+            for i in range(n):
+                self.hb.beat(t - dt + (i + 0.5) * dt / max(n, 1))
+            progress = self.hb.progress(t)
+            if self._adaptive is not None:
+                self.controller.gains = self._adaptive.update(
+                    self.controller.gains, progress,
+                    float(self.controller.state.prev_pcap_l), dt)
+            pcap = self.controller.step(progress, dt)
+            self.actuator.set_pcap(pcap)
+            traces["t"].append(t)
+            traces["progress"].append(progress)
+            traces["pcap"].append(pcap)
+            traces["power"].append(meas["power"])
+            traces["energy"].append(float(self.actuator.state.energy))
+            traces["work"].append(float(self.actuator.state.work))
+            if float(self.actuator.state.work) >= total_work:
+                break
+        return {k: np.asarray(v) for k, v in traces.items()}
+
+    # ---- checkpointable state ----------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "prev_error": float(self.controller.state.prev_error),
+            "prev_pcap_l": float(self.controller.state.prev_pcap_l),
+            "t": self._t,
+        }
+
+    def load_state_dict(self, d: dict) -> None:
+        import jax.numpy as jnp
+        from repro.core.controller import PIState
+        self.controller.state = PIState(
+            prev_error=jnp.float32(d["prev_error"]),
+            prev_pcap_l=jnp.float32(d["prev_pcap_l"]))
+        self._t = float(d["t"])

@@ -1,0 +1,64 @@
+"""Phase/bottleneck classification: couples the roofline to the controller.
+
+From the dry-run cost artifacts (or runtime counters on real hardware) the
+three roofline terms classify each (arch x shape) cell:
+
+* collective- or memory-bound -> strongly saturating power-to-progress
+  curve (the paper's STREAM regime): large energy headroom, deep epsilon OK.
+* compute-bound -> near-linear curve: little headroom (paper §5.2 predicts
+  exactly this), the controller should keep caps high.
+
+`profile_for_cell` turns a bottleneck classification into a plant profile
+whose knee (alpha, beta) reflects it — used to seed the power controller for
+training runs of each cell before any online adaptation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.plant import PROFILES, PlantProfile
+
+V5E_PEAK_FLOPS = 197e12     # bf16 / chip
+V5E_HBM_BW = 819e9          # bytes/s / chip
+V5E_ICI_BW = 50e9           # bytes/s / link
+
+
+def roofline_terms(flops: float, bytes_hbm: float, bytes_ici: float,
+                   chips: int) -> Dict[str, float]:
+    return {
+        "compute_s": flops / (chips * V5E_PEAK_FLOPS),
+        "memory_s": bytes_hbm / (chips * V5E_HBM_BW),
+        "collective_s": bytes_ici / (chips * V5E_ICI_BW),
+    }
+
+
+def bottleneck(terms: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"),
+               key=lambda k: terms[k])
+
+
+def saturation_ratio(terms: Dict[str, float]) -> float:
+    """How memory/comm-bound the cell is: (non-compute) / compute time."""
+    nc = max(terms["memory_s"], terms["collective_s"])
+    return nc / max(terms["compute_s"], 1e-12)
+
+
+def profile_for_cell(terms: Dict[str, float],
+                     base: str = "v5e-chip") -> PlantProfile:
+    """Plant profile whose knee encodes the cell's boundedness.
+
+    Memory-bound cells saturate at lower power (beta down, alpha up):
+    progress stops responding to power earlier — more energy to harvest.
+    Compute-bound cells get a shallow knee: progress ~ linear in power.
+    """
+    p = PROFILES[base]
+    sat = saturation_ratio(terms)
+    # sat >> 1: strongly non-compute-bound. Map sat in [0.3, 3] onto the
+    # knee: alpha scales up with sat, beta slides down.
+    import math
+    s = max(0.3, min(3.0, sat))
+    alpha = p.alpha * s
+    beta = p.beta * (1.2 - 0.2 * s)
+    return dataclasses.replace(p, name=f"{p.name}-sat{s:.2f}",
+                               alpha=alpha, beta=beta)

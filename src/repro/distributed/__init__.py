@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    Rules,
+    current_rules,
+    make_rules,
+    shard,
+    use_rules,
+)

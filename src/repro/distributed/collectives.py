@@ -1,0 +1,108 @@
+"""Post-SPMD HLO analysis: collective bytes and op census.
+
+``compiled.as_text()`` (post-partitioning, post-optimization HLO) is parsed
+for ``all-reduce`` / ``all-gather`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` ops. For each op we take the RESULT shape size and
+weight it with a ring-algorithm factor to estimate per-device link bytes:
+
+  all-reduce:          2 * size * (n-1)/n      (reduce-scatter + all-gather)
+  all-gather:          size * (n-1)/n          (size = gathered result)
+  reduce-scatter:      size_in * (n-1)/n       (we see the scattered result;
+                                                bytes moved ~= result * (n-1))
+  all-to-all:          size * (n-1)/n
+  collective-permute:  size
+
+Caveat (documented in EXPERIMENTS.md): collectives inside While bodies are
+counted once, not x trip-count — the roofline harness therefore derives its
+terms from *unrolled* cost artifacts and scales per-layer analytically.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(line: str) -> int:
+    """Sum of all array shapes on the lhs of the op (handles tuples)."""
+    lhs = line.split(" = ", 1)[0] if " = " in line else ""
+    rhs = line.split(" = ", 1)[1] if " = " in line else line
+    # shapes of the RESULT appear right after '=' and before the op name
+    m = re.match(r"\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)", rhs)
+    region = m.group(1) if m else rhs
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(region):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-kind {count, result_bytes, link_bytes} from HLO text."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "link_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        size = _shape_bytes(line)
+        n = max(2, _group_size(line))
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            link = 2.0 * size * ring
+        elif kind == "reduce-scatter":
+            link = size * (n - 1)  # result is the scattered piece
+        elif kind == "collective-permute":
+            link = float(size)
+        else:  # all-gather, all-to-all
+            link = size * ring
+        s = stats[kind]
+        s["count"] += 1
+        s["result_bytes"] += size
+        s["link_bytes"] += link
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(s["link_bytes"] for s in collective_stats(hlo_text).values())
+
+
+def summarize(stats: Dict[str, Dict[str, float]]) -> str:
+    if not stats:
+        return "(no collectives)"
+    parts = []
+    for kind in sorted(stats):
+        s = stats[kind]
+        parts.append(f"{kind}: n={int(s['count'])} "
+                     f"link={s['link_bytes'] / 1e6:.1f}MB")
+    return "; ".join(parts)

@@ -1,0 +1,211 @@
+"""Logical-axis sharding rules -> PartitionSpec, with divisibility fallback.
+
+Two namespaces share one rules table:
+
+* **weight axes** — names used in :class:`repro.models.layers.ParamDef`
+  (``d_model``, ``d_ff``, ``heads``, ``vocab``, ``experts``, ...).
+* **activation axes** — ``act_*`` names used by model code via
+  :func:`shard` (``act_batch``, ``act_heads``, ``act_kvseq``, ...).
+
+A rule maps a logical axis to a *tuple* of mesh axes (e.g. batch over
+``('pod', 'data')``). :meth:`Rules.spec` drops mesh axes that do not divide
+the dimension (prefix fallback) and never assigns one mesh axis twice within
+a spec — so the same recipe degrades gracefully across all 10 archs
+(24-head models, 40-expert MoE, batch-1 decode, ...).
+
+Recipes:
+
+* ``dp``      — replicated weights (vocab dims still TP), batch-parallel.
+* ``tp``      — megatron-style tensor parallel on the ``model`` axis.
+* ``fsdp_tp`` — ``tp`` + weight ``d_model`` dims sharded over ``data``
+  (FSDP / ZeRO-3-style), required for the 42B/52B/405B archs.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _is_def(x):  # lazy to avoid a circular import with repro.models
+    from repro.models.layers import is_def
+    return is_def(x)
+
+# logical axis -> preferred mesh axes, per recipe
+_RECIPES: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    "dp": {
+        "vocab": ("model",),
+        "act_batch": ("pod", "data"),
+        "act_kv_batch": ("pod", "data"),
+        "act_vocab": ("model",),
+        "act_dinner": ("model",),
+        "act_kvseq": ("model",),
+    },
+    "tp": {
+        "act_kv_batch": ("pod", "data"),
+        "d_ff": ("model",),
+        "moe_ff": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "d_inner": ("model",),
+        "act_batch": ("pod", "data"),
+        "act_heads": ("model",),
+        "act_kv_heads": ("model",),
+        "act_dff": ("model",),
+        "act_vocab": ("model",),
+        "act_experts": ("model",),
+        "act_seq_tp": ("model",),
+        "act_kvseq": ("model",),
+        "act_dinner": ("model",),
+    },
+    "fsdp_tp": {
+        "act_kv_batch": ("pod", "data"),
+        "d_model": ("data",),
+        "d_ff": ("model",),
+        "moe_ff": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "d_inner": ("model",),
+        "act_batch": ("pod", "data"),
+        "act_heads": ("model",),
+        "act_kv_heads": ("model",),
+        "act_dff": ("model",),
+        "act_vocab": ("model",),
+        "act_experts": ("model",),
+        "act_seq_tp": ("model",),
+        "act_kvseq": ("model",),
+        "act_dinner": ("model",),
+        # Megatron-SP: the residual stream between blocks is seq-sharded on
+        # 'model', so the per-layer activations saved by the layer scan for
+        # backward shrink by the TP degree. Blocks all-gather on entry.
+        "act_seq_res": ("model",),
+    },
+}
+
+# decode-time recipe for fsdp_tp archs (perf iteration, EXPERIMENTS §Perf):
+# weights stay sharded over (data x model) — they must, to fit — but the
+# activations' d_model is sharded over 'data' so matmuls contract over a
+# sharded dim and GSPMD emits partial-sum all-reduces of TINY single-token
+# activations instead of all-gathering GBs of weights per decoded token.
+_RECIPES["decode_2d"] = dict(_RECIPES["fsdp_tp"])
+_RECIPES["decode_2d"]["act_batch"] = ("pod",)
+_RECIPES["decode_2d"]["act_dmodel"] = ("data",)
+_RECIPES["decode_2d"]["act_kv_batch"] = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    table: Dict[str, Tuple[str, ...]]
+    recipe: str
+
+    # ---- resolution -----------------------------------------------------
+    def _axis_size(self, name: str) -> int:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[name]
+
+    def _resolve_dim(self, logical: Optional[str], dim: int,
+                     used: set) -> Optional[Tuple[str, ...]]:
+        if logical is None or logical not in self.table:
+            return None
+        want = [a for a in self.table[logical]
+                if a in self.mesh.axis_names and a not in used]
+        # prefix fallback: keep the longest prefix whose product divides dim
+        while want:
+            prod = 1
+            for a in want:
+                prod *= self._axis_size(a)
+            if prod > 1 and dim % prod == 0:
+                for a in want:
+                    used.add(a)
+                return tuple(want)
+            want = want[:-1]
+        return None
+
+    def spec(self, axes: Tuple[Optional[str], ...],
+             shape: Tuple[int, ...]) -> P:
+        used: set = set()
+        entries = []
+        for logical, dim in zip(axes, shape):
+            got = self._resolve_dim(logical, dim, used)
+            if got is None:
+                entries.append(None)
+            elif len(got) == 1:
+                entries.append(got[0])
+            else:
+                entries.append(got)
+        return P(*entries)
+
+    def dim_shardable(self, logical: str, dim: int) -> bool:
+        return self.spec((logical,), (dim,)) != P(None,)
+
+    def shard(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        spec = self.spec(tuple(axes), tuple(x.shape))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # ---- pytree helpers --------------------------------------------------
+    def param_specs(self, defs):
+        """ParamDef pytree -> PartitionSpec pytree."""
+        return jax.tree_util.tree_map(
+            lambda d: self.spec(d.axes, d.shape), defs, is_leaf=_is_def
+        )
+
+    def param_shardings(self, defs):
+        return jax.tree_util.tree_map(
+            lambda d: NamedSharding(self.mesh, self.spec(d.axes, d.shape)),
+            defs,
+            is_leaf=_is_def,
+        )
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_rules(recipe: str, mesh: Mesh) -> Rules:
+    if recipe not in _RECIPES:
+        raise KeyError(f"unknown sharding recipe {recipe!r}")
+    return Rules(mesh=mesh, table=dict(_RECIPES[recipe]), recipe=recipe)
+
+
+# ---------------------------------------------------------------------------
+# Ambient rules (set by step functions while tracing; model code calls shard())
+# ---------------------------------------------------------------------------
+
+_CURRENT: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+
+
+def current_rules() -> Optional[Rules]:
+    return _CURRENT.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _CURRENT.set(rules)
+    try:
+        yield rules
+    finally:
+        _CURRENT.reset(tok)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint if rules are active, else no-op."""
+    rules = _CURRENT.get()
+    if rules is None:
+        return x
+    return rules.shard(x, *axes)
+
+
+def dim_shardable(logical: str, dim: int) -> bool:
+    rules = _CURRENT.get()
+    if rules is None:
+        return False
+    return rules.dim_shardable(logical, dim)

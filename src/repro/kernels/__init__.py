@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's perf-critical compute.
+
+The paper (Cerf et al. 2021) contributes a control layer, not kernels —
+these serve the framework's model substrate (DESIGN.md §7):
+
+* ``flash_attention``  — fwd flash attention (GQA/causal/SWA) for
+  train/prefill; bwd via recompute against the jnp oracle.
+* ``decode_attention`` — split-KV flash-decode (parallel partial softmax +
+  combine) for serve_step.
+* ``selective_scan``   — fused Mamba (S6) chunked scan.
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper, interpret-mode switch) and ``ref.py`` (pure-jnp
+oracle used by the allclose test sweeps).
+"""

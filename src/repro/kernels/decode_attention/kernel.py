@@ -1,0 +1,97 @@
+"""Split-KV flash-decode Pallas kernel (TPU target).
+
+Decode attention is HBM-bandwidth-bound: one query token must stream the
+whole KV cache. The flash-decode structure splits the cache into KV blocks
+that can proceed independently (on a real pod: across sequence-sharded
+chips — the same layout the model's kvseq-TP decode sharding uses):
+
+* phase 1 (this kernel)  — per (batch, head, kv-block): partial
+  (max, sumexp, weighted-acc) over the block, written to HBM.
+* phase 2 (ops.py, jnp)  — log-sum-exp combine over blocks (tiny).
+
+Validity masking uses the absolute-position array ``k_pos`` (ring-buffer
+slots that never held data are negative) against the scalar current
+position, prefetched to SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, kpos_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, block_k: int):
+    q = q_ref[0, 0].astype(jnp.float32)          # [1, hd]
+    k = k_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)          # [bk, hd]
+    kpos = kpos_ref[0]                           # [bk]
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)[0] * scale
+    valid = (kpos >= 0) & (kpos <= pos)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m = jnp.max(s)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p)
+    acc = jax.lax.dot_general(p[None, :], v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)[0]
+    m_ref[0, 0, 0] = m
+    l_ref[0, 0, 0] = l
+    acc_ref[0, 0, 0] = acc
+
+
+def decode_attention_blocks(q: jax.Array, k: jax.Array, v: jax.Array,
+                            k_pos: jax.Array, pos, *, block_k: int = 512,
+                            interpret: bool = False):
+    """q: [B,H,1,hd]; k,v: [B,K,T,hd]; k_pos: [T] -> per-block partials
+    (m [B,H,nk], l [B,H,nk], acc [B,H,nk,hd])."""
+    B, H, _, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    block_k = min(block_k, T)
+    while T % block_k:
+        block_k -= 1
+    nk = T // block_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    grid = (B, H, nk)
+
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda b, h, ik, *_: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ik, *_: (b, h // G, ik, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ik, *_: (b, h // G, ik, 0)),
+                pl.BlockSpec((1, block_k), lambda b, h, ik, *_: (0, ik)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, 1), lambda b, h, ik, *_: (b, h, ik)),
+                pl.BlockSpec((1, 1, 1), lambda b, h, ik, *_: (b, h, ik)),
+                pl.BlockSpec((1, 1, 1, hd),
+                             lambda b, h, ik, *_: (b, h, ik, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, nk), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nk), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, nk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k, v,
+      k_pos.reshape(1, T).astype(jnp.int32))
+    return m, l, acc

@@ -1,0 +1,27 @@
+"""Public decode-attention op: kernel partials + log-sum-exp combine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_blocks
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_pos: jax.Array, pos, *, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B,H,hd]; k,v: [B,T,K,hd]; k_pos: [T]; pos scalar -> [B,H,hd]."""
+    B, H, hd = q.shape
+    qT = q[:, :, None, :]                       # [B,H,1,hd]
+    kT = k.transpose(0, 2, 1, 3)                # [B,K,T,hd]
+    vT = v.transpose(0, 2, 1, 3)
+    m, l, acc = decode_attention_blocks(qT, kT, vT, k_pos, pos,
+                                        block_k=block_k,
+                                        interpret=interpret)
+    # combine partial softmaxes across KV blocks
+    m_all = jnp.max(m, axis=-1, keepdims=True)          # [B,H,1]
+    corr = jnp.exp(m - m_all)                           # [B,H,nk]
+    l_all = jnp.sum(l * corr, axis=-1)                  # [B,H]
+    o = jnp.einsum("bhk,bhkd->bhd", corr, acc) / jnp.maximum(
+        l_all, 1e-30)[..., None]
+    return o.astype(q.dtype)

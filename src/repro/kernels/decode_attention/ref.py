@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_pos: jax.Array, pos) -> jax.Array:
+    """q: [B,H,hd]; k,v: [B,T,K,hd]; k_pos: [T] absolute positions
+    (negative = never written); pos: scalar current position -> [B,H,hd]."""
+    B, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    valid = (k_pos >= 0) & (k_pos <= pos)
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

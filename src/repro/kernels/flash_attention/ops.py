@@ -1,0 +1,53 @@
+"""Public flash-attention op: layout adaptation + recompute backward.
+
+Forward runs the Pallas kernel; backward recomputes attention through the
+jnp oracle's VJP (FlashAttention-style recompute — nothing but (q,k,v) is
+saved). The public layout matches the model code: q [B,S,H,hd],
+k/v [B,T,K,hd].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal: bool, window: Optional[int], block: int,
+           interpret: bool):
+    qT = q.transpose(0, 2, 1, 3)  # [B,H,S,hd]
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(qT, kT, vT, causal=causal, window=window,
+                            block_q=block, block_k=block,
+                            interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, window, block, interpret):
+    return _flash(q, k, v, causal, window, block, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, window, block, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_pos=None, k_pos=None, *, causal: bool = True,
+                    window: Optional[int] = None, block: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd] -> [B,S,H,hd]. Differentiable."""
+    del q_pos, k_pos  # kernel assumes arange positions (train/prefill)
+    return _flash(q, k, v, causal, window, block, interpret)

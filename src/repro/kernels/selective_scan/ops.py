@@ -1,0 +1,14 @@
+"""Public selective-scan op (jit wrapper, interpret switch)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan_pallas
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bc: jax.Array,
+                   Cc: jax.Array, D: jax.Array, *, block_d: int = 256,
+                   chunk: int = 64, interpret: bool = False) -> jax.Array:
+    """Fused Mamba S6 scan. See kernel.py for shapes and the fusion story."""
+    return selective_scan_pallas(x, dt, A, Bc, Cc, D, block_d=block_d,
+                                 chunk=chunk, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Mamba (S6) selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bc: jax.Array, Cc: jax.Array,
+                       D: jax.Array) -> jax.Array:
+    """x, dt: [B,S,d]; A: [d,N]; Bc, Cc: [B,S,N]; D: [d] -> y [B,S,d].
+
+    h_s = exp(dt_s A) h_{s-1} + dt_s x_s B_s ;  y_s = h_s . C_s + D x_s
+    """
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    dA = jnp.exp(dt32[..., None] * A)                     # [B,S,d,N]
+    dBx = (dt32 * x32)[..., None] * Bc[:, :, None, :]     # [B,S,d,N]
+
+    def step(h, xs):
+        dA_s, dBx_s, C_s = xs
+        h = dA_s * h + dBx_s
+        y = jnp.einsum("bdn,bn->bd", h, C_s)
+        return h, y
+
+    B, S, d = x.shape
+    N = A.shape[1]
+    h0 = jnp.zeros((B, d, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (dA.swapaxes(0, 1), dBx.swapaxes(0, 1),
+                          Cc.swapaxes(0, 1).astype(jnp.float32)))
+    y = ys.swapaxes(0, 1) + x32 * D.astype(jnp.float32)
+    return y.astype(x.dtype)

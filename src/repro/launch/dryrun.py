@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first backend init, and the production meshes need 512 placeholder
+host devices (16x16 single pod, 2x16x16 multi-pod).
+
+Per cell we produce two artifacts:
+
+* ``full`` — the real step (scan-over-layers, blocked attention, remat,
+  microbatching): proves the distribution config compiles, yields
+  ``memory_analysis()`` (the fits-in-HBM proof) and the collective schedule.
+* ``cost`` — unrolled 1-unit and 2-unit lowerings (no layer scan, no inner
+  scans): XLA's cost_analysis counts While bodies ONCE, so the roofline
+  terms are derived from the unit difference and scaled by depth
+  analytically (see benchmarks/roofline.py).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k [--multi-pod] [--artifact both] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import applicable_shapes, get_config, get_shape, list_archs
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.collectives import collective_stats, summarize
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+from repro.models.types import ApplyOptions
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def train_config_for(cfg: ModelConfig, shape: ShapeConfig) -> TrainConfig:
+    """Memory-fitting knobs per arch size (documented in EXPERIMENTS.md).
+
+    Microbatching bounds the per-layer saved activations (scan-over-layers
+    saves the block input per layer per live microbatch); bf16 moments and
+    accumulators keep the 40B+ archs inside 16 GiB/chip HBM.
+    """
+    params_b = cfg.param_count() / 1e9
+    if params_b > 100:  # llama3-405b
+        # microbatch must stay >= the batch-sharding factor (32 on the
+        # multi-pod mesh) or the microbatch loses its batch sharding
+        return TrainConfig(microbatch=32, moment_dtype="bfloat16",
+                           accum_dtype="bfloat16")
+    if params_b > 20:  # phi3.5-moe-42b, jamba-52b
+        return TrainConfig(microbatch=32, moment_dtype="bfloat16")
+    return TrainConfig(microbatch=32)
+
+
+def _opts_for(artifact: str, cfg: ModelConfig) -> ApplyOptions:
+    if artifact == "cost":
+        return ApplyOptions(attn_impl="blocked", block_q=2048, unroll=True,
+                            scan_layers=False)
+    return ApplyOptions(attn_impl="blocked", block_q=512, unroll=False,
+                        scan_layers=True)
+
+
+def _cost_cfg(cfg: ModelConfig, repeats: int) -> ModelConfig:
+    """Unrolled shallow config for the cost artifact."""
+    kw = dict(num_layers=repeats * len(cfg.pattern), remat="none")
+    if cfg.mamba:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, chunk=2048)
+    if cfg.xlstm:
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk=2048)
+    return dataclasses.replace(cfg, **kw)
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    from repro.models import input_defs
+    from repro.models.layers import abstract
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    return abstract(input_defs(cfg, shape), jnp.dtype(cfg.compute_dtype))
+
+
+def _lower_compile(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   artifact: str):
+    opts = _opts_for(artifact, cfg)
+    tcfg = train_config_for(cfg, shape)
+    if artifact == "cost":
+        # the microbatch accumulation loop is a While: its body would be
+        # counted once by cost_analysis -> disable accumulation so the cost
+        # artifact sees the whole step's compute (memory is irrelevant here;
+        # the fits-proof comes from the full artifact)
+        tcfg = dataclasses.replace(tcfg, microbatch=0)
+    fn, args, in_sh, out_sh, donate = make_step(cfg, opts, mesh, shape, tcfg)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    t0 = time.time()
+    with mesh:
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    if ma is None:
+        return {"unavailable": True}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "temp_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             artifact: str) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "artifact": artifact,
+        "mode": shape.mode,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "pattern_len": len(cfg.pattern),
+        "num_layers": cfg.num_layers,
+        "tokens": shape.tokens if shape.mode != "decode" else
+        shape.global_batch,
+    }
+
+    if artifact == "full":
+        compiled, t_lower, t_compile = _lower_compile(cfg, shape, mesh,
+                                                      "full")
+        ca = compiled.cost_analysis() or {}
+        mem = _memory_dict(compiled)
+        hlo = compiled.as_text()
+        cstats = collective_stats(hlo)
+        result.update({
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "cost_analysis": {k: float(v) for k, v in ca.items()
+                              if isinstance(v, (int, float))},
+            "memory_analysis": mem,
+            "collectives": cstats,
+            "collectives_summary": summarize(cstats),
+            "hlo_bytes": len(hlo),
+        })
+        print(f"[full] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile={t_compile:.1f}s flops={ca.get('flops', 0):.3e} "
+              f"mem={mem} colls={summarize(cstats)}")
+        return result
+
+    # cost artifact: unrolled 1-unit and 2-unit lowerings
+    per = {}
+    for repeats in (1, 2):
+        ccfg = _cost_cfg(cfg, repeats)
+        compiled, t_lower, t_compile = _lower_compile(ccfg, shape, mesh,
+                                                      "cost")
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        cstats = collective_stats(hlo)
+        per[repeats] = {
+            "compile_s": round(t_compile, 2),
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "collective_link_bytes": sum(s["link_bytes"]
+                                         for s in cstats.values()),
+            "collectives": cstats,
+        }
+        print(f"[cost R={repeats}] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile={t_compile:.1f}s flops={per[repeats]['flops']:.3e} "
+              f"coll={per[repeats]['collective_link_bytes']:.3e}B")
+    unit = {k: per[2][k] - per[1][k]
+            for k in ("flops", "bytes_accessed", "collective_link_bytes")}
+    result.update({
+        "cost_r1": per[1],
+        "cost_r2": per[2],
+        "per_unit": unit,
+        "num_repeats": cfg.num_repeats,
+        # total = base (R1 minus one unit) + num_repeats * unit
+        "total_flops": per[1]["flops"] - unit["flops"]
+        + cfg.num_repeats * unit["flops"],
+        "total_bytes": per[1]["bytes_accessed"] - unit["bytes_accessed"]
+        + cfg.num_repeats * unit["bytes_accessed"],
+        "total_collective_link_bytes":
+            per[1]["collective_link_bytes"] - unit["collective_link_bytes"]
+            + cfg.num_repeats * unit["collective_link_bytes"],
+    })
+    return result
+
+
+def cells(arch: str | None = None, shape: str | None = None):
+    archs = [arch] if arch else list(list_archs())
+    for a in archs:
+        cfg = get_config(a)
+        shapes = ([get_shape(shape)] if shape
+                  else list(applicable_shapes(cfg)))
+        for s in shapes:
+            yield a, s.name
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--artifact", default="full",
+                   choices=("full", "cost", "both"))
+    p.add_argument("--all", action="store_true",
+                   help="all archs x applicable shapes")
+    p.add_argument("--out", default=str(DEFAULT_OUT))
+    args = p.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    artifacts = ["full", "cost"] if args.artifact == "both" else \
+        [args.artifact]
+
+    todo = list(cells(None if args.all else args.arch,
+                      None if args.all else args.shape))
+    failures = []
+    for arch, shape_name in todo:
+        for mp in meshes:
+            for art in artifacts:
+                tag = (f"{arch}__{shape_name}__"
+                       f"{'2x16x16' if mp else '16x16'}__{art}")
+                path = out_dir / f"{tag}.json"
+                try:
+                    res = run_cell(arch, shape_name, multi_pod=mp,
+                                   artifact=art)
+                    path.write_text(json.dumps(res, indent=1))
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    path.with_suffix(".err").write_text(
+                        traceback.format_exc())
+                    print(f"[FAIL] {tag}: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print(f"\nall {len(todo) * len(meshes) * len(artifacts)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Step-function builders: train / prefill / decode, with shardings.
+
+Each builder returns ``(fn, args_abstract, in_shardings, out_shardings)``
+ready for ``jax.jit(fn, in_shardings=..., out_shardings=...)`` — used by the
+launcher with real arrays and by the dry-run with ShapeDtypeStructs.
+
+Sharding rules are bound at trace time via ``use_rules`` so all the
+``shard(...)`` constraints inside model code resolve against the target
+mesh. ZeRO-1: optimizer state maps through the ``fsdp_tp`` rules even when
+params use ``tp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import Rules, make_rules, use_rules
+from repro.models import model as M
+from repro.models.layers import abstract
+from repro.models.types import ApplyOptions
+from repro.optim.adamw import adamw_init_defs, adamw_update
+from repro.optim.compression import compress_grads, ef_init_defs
+from repro.optim.schedule import lr_schedule
+
+
+def _rules_for(cfg: ModelConfig, mesh) -> Rules:
+    return make_rules(cfg.sharding_recipe, mesh)
+
+
+def _opt_rules_for(cfg: ModelConfig, tcfg: TrainConfig, mesh) -> Rules:
+    if tcfg.zero1:
+        return make_rules("fsdp_tp", mesh)
+    return _rules_for(cfg, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, opts: ApplyOptions,
+                    mesh, shape: ShapeConfig):
+    rules = _rules_for(cfg, mesh)
+    opt_rules = _opt_rules_for(cfg, tcfg, mesh)
+
+    param_defs = M.model_defs(cfg)
+    opt_defs = adamw_init_defs(param_defs, tcfg.moment_dtype)
+    in_defs = M.input_defs(cfg, shape)
+    use_ef = tcfg.grad_compression == "int8_ef"
+    ef_defs = ef_init_defs(param_defs) if use_ef else None
+
+    accum_dt = jnp.dtype(tcfg.accum_dtype)
+
+    def train_step(params, opt_state, batch, ef_state=None):
+        with use_rules(rules):
+            grad_fn = jax.value_and_grad(
+                lambda p, b: M.loss_fn(cfg, opts, p, b), has_aux=True)
+
+            mb = tcfg.microbatch
+            B = shape.global_batch
+            if mb and mb < B:
+                n_micro = B // mb
+
+                def micro_body(acc, mb_batch):
+                    (loss, metrics), g = grad_fn(params, mb_batch)
+                    acc_g, acc_loss = acc
+                    acc_g = jax.tree_util.tree_map(
+                        lambda a, x: a + x.astype(accum_dt), acc_g, g)
+                    return (acc_g, acc_loss + loss), None
+
+                zeros = jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, accum_dt), params)
+                stacked = jax.tree_util.tree_map(
+                    lambda t: t.reshape((n_micro, mb) + t.shape[1:]), batch)
+                (grads, loss_sum), _ = jax.lax.scan(
+                    micro_body, (zeros, jnp.float32(0.0)), stacked)
+                grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+                loss = loss_sum / n_micro
+                metrics = {"ce": loss, "aux": jnp.float32(0.0)}
+            else:
+                (loss, metrics), grads = grad_fn(params, batch)
+
+            if use_ef:
+                grads, ef_state = compress_grads(grads, ef_state)
+
+            lr = lr_schedule(tcfg, opt_state["step"])
+            new_params, new_opt, gnorm = adamw_update(
+                tcfg, params, grads, opt_state, lr)
+            out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                           **metrics}
+        if use_ef:
+            return new_params, new_opt, out_metrics, ef_state
+        return new_params, new_opt, out_metrics
+
+    param_sh = rules.param_shardings(param_defs)
+    opt_sh = opt_rules.param_shardings(opt_defs)
+    in_sh = rules.param_shardings(in_defs)
+    repl = rules.named(jax.sharding.PartitionSpec())
+    metrics_sh = {"loss": repl, "grad_norm": repl, "lr": repl, "ce": repl,
+                  "aux": repl}
+
+    args_abstract = (
+        abstract(param_defs, jnp.dtype(cfg.param_dtype)),
+        abstract(opt_defs, jnp.float32),
+        abstract(in_defs, jnp.dtype(cfg.compute_dtype)),
+    )
+    in_shardings = (param_sh, opt_sh, in_sh)
+    out_shardings = (param_sh, opt_sh, metrics_sh)
+    if use_ef:
+        ef_sh = rules.param_shardings(ef_defs)
+        args_abstract = args_abstract + (abstract(ef_defs, jnp.float32),)
+        in_shardings = in_shardings + (ef_sh,)
+        out_shardings = out_shardings + (ef_sh,)
+    return train_step, args_abstract, in_shardings, out_shardings
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, opts: ApplyOptions, mesh,
+                      shape: ShapeConfig):
+    rules = _rules_for(cfg, mesh)
+    param_defs = M.model_defs(cfg)
+    in_defs = M.input_defs(cfg, shape)
+    cache_d = M.cache_defs(cfg, shape.global_batch, shape.seq_len)
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return M.prefill(cfg, opts, params, batch)
+
+    param_sh = rules.param_shardings(param_defs)
+    in_sh = rules.param_shardings(in_defs)
+    logits_sh = rules.named(rules.spec(
+        ("act_batch", "act_vocab"), (shape.global_batch, cfg.vocab_size)))
+    cache_sh = rules.param_shardings(cache_d)
+
+    args_abstract = (
+        abstract(param_defs, jnp.dtype(cfg.param_dtype)),
+        abstract(in_defs, jnp.dtype(cfg.compute_dtype)),
+    )
+    return (prefill_step, args_abstract, (param_sh, in_sh),
+            (logits_sh, cache_sh))
+
+
+def make_decode_step(cfg: ModelConfig, opts: ApplyOptions, mesh,
+                     shape: ShapeConfig):
+    # §Perf iteration "decode_2d_tp" tried 2D-TP activations here (weights
+    # contracted over sharded d_model instead of FSDP-gathered): REFUTED at
+    # batch 128 — losing batch-over-data sharding cost 2.8x collective and
+    # 3.2x compute. The recipe remains available for micro-batch serving.
+    rules = _rules_for(cfg, mesh)
+    param_defs = M.model_defs(cfg)
+    in_defs = M.input_defs(cfg, shape)
+    cache_d = M.cache_defs(cfg, shape.global_batch, shape.seq_len)
+
+    def decode_fn(params, cache, batch):
+        with use_rules(rules):
+            return M.decode_step(cfg, opts, params, cache, batch)
+
+    param_sh = rules.param_shardings(param_defs)
+    cache_sh = rules.param_shardings(cache_d)
+    in_sh = rules.param_shardings(in_defs)
+    logits_sh = rules.named(rules.spec(
+        ("act_batch", "act_vocab"), (shape.global_batch, cfg.vocab_size)))
+
+    args_abstract = (
+        abstract(param_defs, jnp.dtype(cfg.param_dtype)),
+        abstract(cache_d, jnp.dtype(cfg.compute_dtype)),
+        abstract(in_defs, jnp.dtype(cfg.compute_dtype)),
+    )
+    return (decode_fn, args_abstract, (param_sh, cache_sh, in_sh),
+            (logits_sh, cache_sh))
+
+
+def make_step(cfg: ModelConfig, opts: ApplyOptions, mesh, shape: ShapeConfig,
+              tcfg: Optional[TrainConfig] = None):
+    """Dispatch on shape.mode. Returns (fn, args, in_sh, out_sh, donate)."""
+    if shape.mode == "train":
+        f, a, i, o = make_train_step(cfg, tcfg or TrainConfig(), opts, mesh,
+                                     shape)
+        return f, a, i, o, (0, 1)
+    if shape.mode == "prefill":
+        f, a, i, o = make_prefill_step(cfg, opts, mesh, shape)
+        return f, a, i, o, ()
+    f, a, i, o = make_decode_step(cfg, opts, mesh, shape)
+    return f, a, i, o, (1,)

@@ -1,0 +1,11 @@
+from repro.models.model import (  # noqa: F401
+    cache_defs,
+    decode_step,
+    forward,
+    init_params,
+    input_defs,
+    loss_fn,
+    model_defs,
+    prefill,
+)
+from repro.models.types import ApplyOptions  # noqa: F401

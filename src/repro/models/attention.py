@@ -1,0 +1,318 @@
+"""GQA attention: train/prefill (blocked flash-style) + decode with KV cache.
+
+Sharding modes (picked automatically from the active rules):
+
+* **head-TP** — query heads divide the ``model`` axis: heads sharded,
+  KV replicated per shard (classic Megatron TP).
+* **kvseq-TP** — heads do not divide the axis (24-head / 4-head archs) or we
+  are decoding: the KV sequence dim is sharded on ``model`` (context-parallel
+  / flash-decode style); the softmax contraction over KV generates an
+  all-reduce which GSPMD inserts automatically.
+
+The blocked implementation scans over query blocks with full-KV scores per
+block (online-softmax-free but memory-bounded: peak temp is
+``[B, H, block_q, T]``). ``opts.unroll=True`` unrolls that scan so the
+cost artifact counts every block's FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import dim_shardable, shard
+from repro.models.layers import ParamDef, apply_rope, rms_norm, rms_norm_def
+from repro.models.types import ApplyOptions
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    a = cfg.attn
+    D = cfg.d_model
+    defs = {
+        "ln": rms_norm_def(D, "d_model"),
+        "wq": ParamDef((D, a.num_heads, a.head_dim),
+                       ("d_model", "heads", "head_dim")),
+        "wk": ParamDef((D, a.num_kv_heads, a.head_dim),
+                       ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamDef((D, a.num_kv_heads, a.head_dim),
+                       ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamDef((a.num_heads, a.head_dim, D),
+                       ("heads", "head_dim", "d_model")),
+    }
+    if a.qk_norm:
+        defs["q_norm"] = rms_norm_def(a.head_dim, None)
+        defs["k_norm"] = rms_norm_def(a.head_dim, None)
+    return defs
+
+
+def attn_cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """KV-cache ParamDefs for one attention block (SWA: ring buffer)."""
+    a = cfg.attn
+    window = a.sliding_window
+    T = min(seq_len, window) if window else seq_len
+    kv_shape = (batch, T, a.num_kv_heads, a.head_dim)
+    axes = ("act_kv_batch", "act_kvseq", "act_kv_heads", None)
+    dt = cfg.compute_dtype
+    return {
+        "k": ParamDef(kv_shape, axes, init="zeros", dtype=dt),
+        "v": ParamDef(kv_shape, axes, init="zeros", dtype=dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int],
+          causal: bool) -> jax.Array:
+    """[Sq, Tk] bool validity mask."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k <= q
+    if window is not None:
+        m &= (q - k) < window
+    m &= k >= 0  # ring-buffer slots that never held data
+    return m
+
+
+def _score_block(qb: jax.Array, k_rep: jax.Array, v_rep: jax.Array,
+                 qpos_b: jax.Array, k_pos: jax.Array,
+                 window: Optional[int], causal: bool, scale: float,
+                 kvseq_tp: bool) -> jax.Array:
+    """qb: [B, blk, H, hd]; k_rep/v_rep: [B, T, H, hd] -> [B, blk, H, hd]."""
+    # perf iteration "bf16_cotangents" (§Perf): bf16 dots (TPU accumulates
+    # bf16 matmuls in f32 internally) + explicit f32 upcast for the softmax.
+    # preferred_element_type=f32 made every dot TRANSPOSE produce f32
+    # cotangents -> f32 weight all-gathers and f32 activation all-reduces.
+    s = jnp.einsum("bqhd,bthd->bhqt", qb, k_rep).astype(jnp.float32) * scale
+    if kvseq_tp:
+        s = shard(s, "act_batch", None, None, "act_kvseq")
+    else:
+        s = shard(s, "act_batch", "act_heads", None, None)
+    m = _mask(qpos_b, k_pos, window, causal)
+    s = jnp.where(m[None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", p.astype(v_rep.dtype), v_rep)
+    return o.astype(v_rep.dtype)
+
+
+def _score_block_grouped(qb: jax.Array, k: jax.Array, v: jax.Array,
+                         qpos_b: jax.Array, k_pos: jax.Array,
+                         window: Optional[int], causal: bool, scale: float,
+                         kvseq_tp: bool) -> jax.Array:
+    """GQA without materializing repeated K/V (perf iteration: the repeat
+    inflated decode HBM bytes by the group factor — 16x for llama3-405b).
+
+    qb: [B, blk, H, hd]; k, v: [B, T, K, hd] -> [B, blk, H, hd].
+    """
+    B, blk, H, hd = qb.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = qb.reshape(B, blk, K, G, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) * scale
+    if kvseq_tp:
+        s = shard(s, "act_batch", None, None, None, "act_kvseq")
+    m = _mask(qpos_b, k_pos, window, causal)
+    s = jnp.where(m[None, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, blk, H, hd).astype(v.dtype)
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, k_pos: jax.Array, *,
+                   window: Optional[int], causal: bool,
+                   opts: ApplyOptions, kvseq_tp: bool) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,T,K,hd]; q_pos: [S]; k_pos: [T] -> [B,S,H,hd]."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    if kvseq_tp and G > 1:
+        # grouped einsum: no K/V repeat (perf iteration, EXPERIMENTS §Perf)
+        k = shard(k, "act_batch", "act_kvseq", None, None)
+        v = shard(v, "act_batch", "act_kvseq", None, None)
+        if opts.attn_impl == "reference" or S <= opts.block_q \
+                or S % opts.block_q != 0:
+            return _score_block_grouped(q, k, v, q_pos, k_pos, window,
+                                        causal, scale, kvseq_tp)
+        blk = opts.block_q
+        nb = S // blk
+        q_blocks = q.reshape(B, nb, blk, H, hd).swapaxes(0, 1)
+        qpos_blocks = q_pos.reshape(nb, blk)
+
+        def body_g(_, xs):
+            qb, qpos_b = xs
+            return None, _score_block_grouped(qb, k, v, qpos_b, k_pos,
+                                              window, causal, scale,
+                                              kvseq_tp)
+
+        _, o_blocks = jax.lax.scan(body_g, None, (q_blocks, qpos_blocks),
+                                   unroll=nb if opts.unroll else 1)
+        return o_blocks.swapaxes(0, 1).reshape(B, S, H, hd)
+
+    if G > 1:
+        k_rep = jnp.repeat(k, G, axis=2)
+        v_rep = jnp.repeat(v, G, axis=2)
+    else:
+        k_rep, v_rep = k, v
+    if kvseq_tp:
+        k_rep = shard(k_rep, "act_batch", "act_kvseq", None, None)
+        v_rep = shard(v_rep, "act_batch", "act_kvseq", None, None)
+    else:
+        k_rep = shard(k_rep, "act_batch", None, "act_heads", None)
+        v_rep = shard(v_rep, "act_batch", None, "act_heads", None)
+
+    blk = opts.block_q
+    if opts.attn_impl == "reference" or S <= blk or S % blk != 0:
+        return _score_block(q, k_rep, v_rep, q_pos, k_pos, window, causal,
+                            scale, kvseq_tp)
+
+    if opts.attn_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, q_pos, k_pos, window=window, causal=causal,
+            interpret=(opts.attn_impl == "pallas_interpret"))
+
+    nb = S // blk
+    q_blocks = q.reshape(B, nb, blk, H, hd).swapaxes(0, 1)  # [nb,B,blk,H,hd]
+    qpos_blocks = q_pos.reshape(nb, blk)
+
+    def body(_, xs):
+        qb, qpos_b = xs
+        o = _score_block(qb, k_rep, v_rep, qpos_b, k_pos, window, causal,
+                         scale, kvseq_tp)
+        return None, o
+
+    _, o_blocks = jax.lax.scan(body, None, (q_blocks, qpos_blocks),
+                               unroll=nb if opts.unroll else 1)
+    return o_blocks.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# Block apply: train / prefill
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array,
+                 positions: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    a = cfg.attn
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    # explicit bf16 boundary: the seq all-gather (Megatron-SP entry) must
+    # move the bf16 h, not the fp32 rms_norm internals (§Perf iteration
+    # "bf16_boundaries": halves the dominant AG/AR bytes)
+    h = shard(h, "act_batch", None, None)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if a.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def attn_apply(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+               x: jax.Array) -> jax.Array:
+    """Full-sequence (train/prefill) attention. x: [B, S, D]."""
+    a = cfg.attn
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    pos_b = jnp.broadcast_to(positions, (B, S))
+    q, k, v = _project_qkv(cfg, p, x, pos_b)
+    kvseq_tp = not dim_shardable("act_heads", a.num_heads)
+    o = attention_core(q, k, v, positions, positions,
+                       window=a.sliding_window, causal=a.causal,
+                       opts=opts, kvseq_tp=kvseq_tp)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard(y, "act_batch", "act_seq_res", None)
+
+
+def attn_prefill(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                 x: jax.Array) -> Tuple[jax.Array, dict]:
+    """Prefill: like attn_apply but also returns the populated KV cache."""
+    a = cfg.attn
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    pos_b = jnp.broadcast_to(positions, (B, S))
+    q, k, v = _project_qkv(cfg, p, x, pos_b)
+    kvseq_tp = not dim_shardable("act_heads", a.num_heads)
+    o = attention_core(q, k, v, positions, positions,
+                       window=a.sliding_window, causal=a.causal,
+                       opts=opts, kvseq_tp=kvseq_tp)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    if a.sliding_window and S > a.sliding_window:
+        w = a.sliding_window
+        # ring buffer: slot i holds the latest position p = i (mod w)
+        start = S - w
+        k_tail = jax.lax.dynamic_slice_in_dim(k, start, w, axis=1)
+        v_tail = jax.lax.dynamic_slice_in_dim(v, start, w, axis=1)
+        roll = start % w
+        k_cache = jnp.roll(k_tail, shift=roll, axis=1)
+        v_cache = jnp.roll(v_tail, shift=roll, axis=1)
+    else:
+        k_cache, v_cache = k, v
+    cache = {
+        "k": shard(k_cache, "act_batch", "act_kvseq", "act_kv_heads", None),
+        "v": shard(v_cache, "act_batch", "act_kvseq", "act_kv_heads", None),
+    }
+    return shard(y, "act_batch", "act_seq_res", None), cache
+
+
+# ---------------------------------------------------------------------------
+# Block apply: decode (single new token, cache of length T)
+# ---------------------------------------------------------------------------
+
+
+def attn_decode(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array,
+                cache: dict, pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """x: [B, 1, D]; cache k/v: [B, T, K, hd]; pos: scalar current index."""
+    a = cfg.attn
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos)
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+
+    window = a.sliding_window
+    slot = (pos % window) if window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    k = shard(k, "act_kv_batch", "act_kvseq", "act_kv_heads", None)
+    v = shard(v, "act_kv_batch", "act_kvseq", "act_kv_heads", None)
+
+    slots = jnp.arange(T)
+    if window:
+        # absolute position held by ring slot i (negative -> never written)
+        k_pos = pos - ((pos - slots) % window)
+    else:
+        k_pos = jnp.where(slots <= pos, slots, -1)
+
+    if opts.attn_impl in ("pallas", "pallas_interpret"):
+        # split-KV flash-decode kernel (repro.kernels.decode_attention)
+        from repro.kernels.decode_attention.ops import decode_attention
+        o = decode_attention(
+            q[:, 0], k, v, k_pos.astype(jnp.int32), pos,
+            interpret=(opts.attn_impl == "pallas_interpret"))[:, None]
+    else:
+        o = attention_core(q, k, v, jnp.full((1,), pos), k_pos,
+                           window=window, causal=a.causal,
+                           opts=dataclasses.replace(opts,
+                                                    attn_impl="reference"),
+                           kvseq_tp=True)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard(y, "act_batch", None, None), {"k": k, "v": v}

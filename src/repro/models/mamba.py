@@ -1,0 +1,170 @@
+"""Mamba (S6) block: chunked selective scan, TPU-adapted.
+
+The CUDA reference fuses the recurrence into a single kernel over registers;
+on TPU we instead (a) keep the inner dim sharded on ``model``, (b) run the
+recurrence as an associative scan *within* chunks (log-depth, VPU friendly)
+and a `lax.scan` carry *across* chunks, and (c) keep everything fp32 inside
+the recurrence for stability. A Pallas kernel (repro.kernels.selective_scan)
+implements the same chunking explicitly for the TPU target.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import ParamDef, rms_norm, rms_norm_def
+from repro.models.types import ApplyOptions
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_in, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, N, d_conv, dt_rank = _dims(cfg)
+    return {
+        "ln": rms_norm_def(D, "d_model"),
+        "in_proj": ParamDef((D, 2 * d_in), ("d_model", "d_inner")),
+        "conv_w": ParamDef((d_conv, d_in), (None, "d_inner")),
+        "x_proj": ParamDef((d_in, dt_rank + 2 * N), ("d_inner", None)),
+        "dt_w": ParamDef((dt_rank, d_in), (None, "d_inner")),
+        "dt_bias": ParamDef((d_in,), ("d_inner",), init="zeros"),
+        "a_log": ParamDef((d_in, N), ("d_inner", None), init="ssm_a_log"),
+        "d_skip": ParamDef((d_in,), ("d_inner",), init="ones"),
+        "out_proj": ParamDef((d_in, D), ("d_inner", "d_model")),
+    }
+
+
+def mamba_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    d_in, N, d_conv, _ = _dims(cfg)
+    return {
+        "conv": ParamDef((batch, d_conv - 1, d_in),
+                         ("act_batch", None, "act_dinner"),
+                         init="zeros", dtype=cfg.compute_dtype),
+        "ssm": ParamDef((batch, d_in, N), ("act_batch", "act_dinner", None),
+                        init="zeros", dtype="float32"),
+    }
+
+
+def _split_in(cfg, p, x):
+    """ln -> in_proj -> (x_part, z). x: [B, S, D]."""
+    d_in = _dims(cfg)[0]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    h = shard(h, "act_batch", None, None)  # bf16 boundary (§Perf)
+    xz = h @ p["in_proj"]
+    xz = shard(xz, "act_batch", None, "act_dinner")
+    return xz[..., :d_in], xz[..., d_in:]
+
+
+def _ssm_inputs(cfg, p, xa):
+    """xa: [B, S, d_in] (post conv+silu) -> dt, Bc, Cc (fp32)."""
+    _, N, _, dt_rank = _dims(cfg)
+    dbc = (xa @ p["x_proj"]).astype(jnp.float32)
+    dt_in, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_w"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return dt, Bc, Cc  # [B,S,d_in], [B,S,N], [B,S,N]
+
+
+def _causal_conv(xp: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv. xp: [B,S,d_in]; w: [d_conv, d_in]."""
+    d_conv = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xp.shape[:1] + (d_conv - 1,) + xp.shape[2:], xp.dtype)
+    else:
+        pad = state.astype(xp.dtype)
+    xpad = jnp.concatenate([pad, xp], axis=1)
+    out = sum(xpad[:, i:i + xp.shape[1]] * w[i] for i in range(d_conv))
+    new_state = xpad[:, -(d_conv - 1):] if d_conv > 1 else pad
+    return out, new_state
+
+
+def _scan_op(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _mamba_seq(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array):
+    """Full-sequence apply. Returns (out, final_conv_state, final_ssm_state)."""
+    B, S, D = x.shape
+    d_in, N, _, _ = _dims(cfg)
+    chunk = min(cfg.mamba.chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n_chunks = S // chunk
+
+    xp, z = _split_in(cfg, p, x)
+    xc, conv_state = _causal_conv(xp, p["conv_w"])
+    xa = jax.nn.silu(xc)
+    dt, Bc, Cc = _ssm_inputs(cfg, p, xa)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))  # [d_in, N]
+
+    xa32 = xa.astype(jnp.float32)
+    # discretize: Abar [B,S,d_in,N], Bx [B,S,d_in,N]
+    dA = jnp.exp(dt[..., None] * A)  # [B,S,d_in,N]
+    dBx = (dt * xa32)[..., None] * Bc[:, :, None, :]
+
+    def chunk_body(h, xs):
+        dA_c, dBx_c, Cc_c = xs  # [B, chunk, ...]
+        a_cum, b_cum = jax.lax.associative_scan(_scan_op, (dA_c, dBx_c), axis=1)
+        h_all = a_cum * h[:, None] + b_cum  # [B, chunk, d_in, N]
+        y_c = jnp.einsum("bsdn,bsn->bsd", h_all, Cc_c)
+        return h_all[:, -1], y_c
+
+    def reshape_c(t):  # [B,S,...] -> [n_chunks, B, chunk, ...]
+        return t.reshape((B, n_chunks, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    h0 = jnp.zeros((B, d_in, N), jnp.float32)
+    h_last, y_chunks = jax.lax.scan(
+        chunk_body, h0, (reshape_c(dA), reshape_c(dBx), reshape_c(Cc)),
+        unroll=n_chunks if opts.unroll else 1)
+    y = y_chunks.swapaxes(0, 1).reshape(B, S, d_in)
+    y = y + xa32 * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, "act_batch", None, "act_dinner")
+    out = shard(y @ p["out_proj"], "act_batch", "act_seq_res", None)
+    return out, conv_state, h_last
+
+
+def mamba_apply(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                x: jax.Array) -> jax.Array:
+    return _mamba_seq(cfg, opts, p, x)[0]
+
+
+def mamba_prefill(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                  x: jax.Array) -> Tuple[jax.Array, dict]:
+    out, conv_state, h_last = _mamba_seq(cfg, opts, p, x)
+    cache = {"conv": conv_state.astype(jnp.dtype(cfg.compute_dtype)),
+             "ssm": h_last}
+    return out, cache
+
+
+def mamba_decode(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array,
+                 cache: dict, pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """Single-token apply. x: [B, 1, D]; cache: conv state + ssm state."""
+    del pos
+    xp, z = _split_in(cfg, p, x)
+    xc, conv_state = _causal_conv(xp, p["conv_w"], state=cache["conv"])
+    xa = jax.nn.silu(xc)
+    dt, Bc, Cc = _ssm_inputs(cfg, p, xa)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    xa32 = xa.astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0, :, None] * A)  # [B, d_in, N]
+    dBx = (dt[:, 0] * xa32[:, 0])[..., None] * Bc[:, 0, None, :]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + xa32 * p["d_skip"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = shard(y @ p["out_proj"], "act_batch", None, None)
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,377 @@
+"""Model assembly: embed -> repeated block pattern (scan) -> head.
+
+Parameters, KV/state caches and step inputs are all described by ParamDef
+trees (single source of truth for shapes, logical sharding axes, dtypes) —
+the launcher materializes arrays, the dry-run materializes
+ShapeDtypeStructs, and the sharding rules derive PartitionSpecs from the
+same trees.
+
+Layer stacking: the repeating pattern unit (e.g. Jamba's 8-block
+mamba/attn/MoE group) is scanned over ``num_repeats`` with stacked params,
+keeping HLO size O(pattern), not O(depth). ``opts.scan_layers=False``
+unrolls instead (used by the roofline cost artifact, since XLA's
+cost_analysis counts While bodies once).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockConfig, ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import attention, mamba, moe, xlstm
+from repro.models.layers import (ParamDef, materialize, mlp_apply, mlp_defs,
+                                 rms_norm, rms_norm_def, stack_defs)
+from repro.models.types import ApplyOptions
+
+# ---------------------------------------------------------------------------
+# Parameter / cache / input definitions
+# ---------------------------------------------------------------------------
+
+
+def block_defs(cfg: ModelConfig, blk: BlockConfig) -> dict:
+    d = {}
+    if blk.kind == "attn":
+        d["mix"] = attention.attn_defs(cfg)
+    elif blk.kind == "mamba":
+        d["mix"] = mamba.mamba_defs(cfg)
+    elif blk.kind == "mlstm":
+        d["mix"] = xlstm.mlstm_defs(cfg)
+    elif blk.kind == "slstm":
+        d["mix"] = xlstm.slstm_defs(cfg)
+    else:
+        raise ValueError(blk.kind)
+    if blk.ff == "dense":
+        d["ff"] = {"ln": rms_norm_def(cfg.d_model, "d_model"),
+                   **mlp_defs(cfg.d_model, cfg.d_ff, cfg.mlp_gated)}
+    elif blk.ff == "moe":
+        d["ff"] = moe.moe_defs(cfg)
+    return d
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    defs = {
+        "blocks": tuple(
+            stack_defs(block_defs(cfg, blk), cfg.num_repeats)
+            for blk in cfg.pattern
+        ),
+        "final_ln": rms_norm_def(D, "d_model"),
+        "lm_head": ParamDef((D, V), ("d_model", "vocab")),
+    }
+    if cfg.input_mode == "tokens":
+        defs["embed"] = ParamDef((V, D), ("vocab", "d_model"), scale=1.0)
+    else:
+        defs["in_proj"] = ParamDef((D, D), (None, "d_model"))
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    return materialize(model_defs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def block_cache_defs(cfg: ModelConfig, blk: BlockConfig, batch: int,
+                     seq_len: int) -> dict:
+    if blk.kind == "attn":
+        return attention.attn_cache_defs(cfg, batch, seq_len)
+    if blk.kind == "mamba":
+        return mamba.mamba_cache_defs(cfg, batch)
+    if blk.kind == "mlstm":
+        return xlstm.mlstm_cache_defs(cfg, batch)
+    if blk.kind == "slstm":
+        return xlstm.slstm_cache_defs(cfg, batch)
+    raise ValueError(blk.kind)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    return {
+        "blocks": tuple(
+            stack_defs(block_cache_defs(cfg, blk, batch, seq_len),
+                       cfg.num_repeats)
+            for blk in cfg.pattern
+        ),
+        "pos": ParamDef((), (), init="zeros", dtype="int32"),
+    }
+
+
+def input_defs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    tok_axes = ("act_batch", None)
+    if shape.mode == "train":
+        if cfg.input_mode == "tokens":
+            d = {"tokens": ParamDef((B, S), tok_axes, dtype="int32")}
+        else:
+            d = {"embeds": ParamDef((B, S, cfg.d_model),
+                                    ("act_batch", None, None),
+                                    dtype=cfg.compute_dtype)}
+        d["labels"] = ParamDef((B, S), tok_axes, dtype="int32")
+        return d
+    if shape.mode == "prefill":
+        if cfg.input_mode == "tokens":
+            return {"tokens": ParamDef((B, S), tok_axes, dtype="int32")}
+        return {"embeds": ParamDef((B, S, cfg.d_model),
+                                   ("act_batch", None, None),
+                                   dtype=cfg.compute_dtype)}
+    # decode: one new token against a cache of length S
+    if cfg.input_mode == "tokens":
+        return {"tokens": ParamDef((B, 1), tok_axes, dtype="int32")}
+    return {"embeds": ParamDef((B, 1, cfg.d_model), ("act_batch", None, None),
+                               dtype=cfg.compute_dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_mix(cfg, opts, blk, p, x):
+    if blk.kind == "attn":
+        return attention.attn_apply(cfg, opts, p, x)
+    if blk.kind == "mamba":
+        return mamba.mamba_apply(cfg, opts, p, x)
+    if blk.kind == "mlstm":
+        return xlstm.mlstm_apply(cfg, opts, p, x)
+    if blk.kind == "slstm":
+        return xlstm.slstm_apply(cfg, opts, p, x)
+    raise ValueError(blk.kind)
+
+
+def _apply_mix_decode(cfg, opts, blk, p, x, cache, pos):
+    if blk.kind == "attn":
+        return attention.attn_decode(cfg, opts, p, x, cache, pos)
+    if blk.kind == "mamba":
+        return mamba.mamba_decode(cfg, opts, p, x, cache, pos)
+    if blk.kind == "mlstm":
+        return xlstm.mlstm_decode(cfg, opts, p, x, cache, pos)
+    if blk.kind == "slstm":
+        return xlstm.slstm_decode(cfg, opts, p, x, cache, pos)
+    raise ValueError(blk.kind)
+
+
+def _apply_ff(cfg, blk, p, x):
+    """Returns (delta, aux)."""
+    if blk.ff == "dense":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        h = shard(h, "act_batch", None, None)
+        return mlp_apply(p, h, cfg.mlp_gated), jnp.float32(0.0)
+    if blk.ff == "moe":
+        return moe.moe_apply(cfg, p, x)
+    return None, jnp.float32(0.0)
+
+
+def _block_apply(cfg, opts, blk, p, x):
+    x = x + _apply_mix(cfg, opts, blk, p["mix"], x)
+    x = shard(x, "act_batch", "act_seq_res", "act_dmodel")
+    delta, aux = _apply_ff(cfg, blk, p.get("ff"), x) if "ff" in p else (None,
+                                                                        0.0)
+    if delta is not None:
+        x = shard(x + delta, "act_batch", "act_seq_res", "act_dmodel")
+    return x, aux
+
+
+def _block_apply_decode(cfg, opts, blk, p, x, cache, pos):
+    dx, new_cache = _apply_mix_decode(cfg, opts, blk, p["mix"], x, cache, pos)
+    x = x + dx
+    if "ff" in p:
+        delta, _ = _apply_ff(cfg, blk, p["ff"], x)
+        if delta is not None:
+            x = x + delta
+    return shard(x, "act_batch", None, "act_dmodel"), new_cache
+
+
+def _block_apply_prefill(cfg, opts, blk, p, x):
+    """Like _block_apply but also returns the block's populated cache."""
+    B, S, _ = x.shape
+    if blk.kind == "attn":
+        dx, cache = attention.attn_prefill(cfg, opts, p["mix"], x)
+        x = x + dx
+    else:
+        # recurrent blocks: run the full sequence, then regenerate final
+        # state by a single-step decode at the last position (cheap) — the
+        # sequence apply does not expose internal state.
+        x, cache = _recurrent_prefill(cfg, opts, blk, p["mix"], x)
+    x = shard(x, "act_batch", None, None)
+    if "ff" in p:
+        delta, _ = _apply_ff(cfg, blk, p["ff"], x)
+        if delta is not None:
+            x = shard(x + delta, "act_batch", None, None)
+    return x, cache
+
+
+def _recurrent_prefill(cfg, opts, blk, p, x):
+    """Sequence apply + final-state extraction for mamba/mlstm/slstm."""
+    if blk.kind == "mamba":
+        y, state = mamba.mamba_prefill(cfg, opts, p, x)
+    elif blk.kind == "mlstm":
+        y, state = xlstm.mlstm_prefill(cfg, opts, p, x)
+    elif blk.kind == "slstm":
+        y, state = xlstm.slstm_prefill(cfg, opts, p, x)
+    else:
+        raise ValueError(blk.kind)
+    return x + y, state
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        tok = batch["tokens"]
+        onehot = jax.nn.one_hot(tok, cfg.vocab_size, dtype=cdt)
+        onehot = shard(onehot, "act_batch", None, "act_vocab")
+        x = jnp.einsum("bsv,vd->bsd", onehot, params["embed"].astype(cdt))
+    else:
+        x = batch["embeds"].astype(cdt) @ params["in_proj"].astype(cdt)
+    return shard(x, "act_batch", "act_seq_res", "act_dmodel")
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _unit(cfg, opts, x, slices):
+    aux = jnp.float32(0.0)
+    for j, blk in enumerate(cfg.pattern):
+        x, a = _block_apply(cfg, opts, blk, slices[j], x)
+        aux = aux + a
+    return x, aux
+
+
+def apply_blocks(cfg: ModelConfig, opts: ApplyOptions, params: dict,
+                 x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    stacked = params["blocks"]
+    unit = _maybe_remat(cfg, lambda x_, sl: _unit(cfg, opts, x_, sl))
+    if opts.scan_layers and cfg.num_repeats > 1:
+        def body(carry, sl):
+            x_, aux_ = carry
+            x_, a = unit(x_, sl)
+            return (x_, aux_ + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    else:
+        aux = jnp.float32(0.0)
+        for r in range(cfg.num_repeats):
+            sl = jax.tree_util.tree_map(lambda t: t[r], stacked)
+            x, a = unit(x, sl)
+            aux = aux + a
+    return x, aux
+
+
+def forward(cfg: ModelConfig, opts: ApplyOptions, params: dict,
+            batch: dict) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits [B,S,V], moe_aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    x, aux = apply_blocks(cfg, opts, params, x)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    x = shard(x, "act_batch", None, None)  # bf16 boundary (§Perf)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, "act_batch", None, "act_vocab"), aux
+
+
+def loss_fn(cfg: ModelConfig, opts: ApplyOptions, params: dict,
+            batch: dict) -> Tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, opts, params, batch)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)  # [B,S]
+    onehot = jax.nn.one_hot(labels, cfg.vocab_size, dtype=logits.dtype)
+    onehot = shard(onehot, "act_batch", None, "act_vocab")
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot).astype(jnp.float32)
+    ce = jnp.mean(lse - picked)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    loss = ce + aux_w * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, opts: ApplyOptions, params: dict,
+            batch: dict) -> Tuple[jax.Array, dict]:
+    """Run the prompt, return (last-token logits [B,V], cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    stacked = params["blocks"]
+
+    def unit_prefill(x_, sl):
+        caches = []
+        for j, blk in enumerate(cfg.pattern):
+            x_, c = _block_apply_prefill(cfg, opts, blk, sl[j], x_)
+            caches.append(c)
+        return x_, tuple(caches)
+
+    unit_prefill = _maybe_remat(cfg, unit_prefill)
+
+    if opts.scan_layers and cfg.num_repeats > 1:
+        def body(x_, sl):
+            x_, caches = unit_prefill(x_, sl)
+            return x_, caches
+
+        x, caches = jax.lax.scan(body, x, stacked)
+    else:
+        per_rep = []
+        for r in range(cfg.num_repeats):
+            sl = jax.tree_util.tree_map(lambda t: t[r], stacked)
+            x, caches_r = unit_prefill(x, sl)
+            per_rep.append(caches_r)
+        caches = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts), *per_rep)
+
+    x_last = rms_norm(x[:, -1], params["final_ln"], cfg.norm_eps)
+    logits = x_last @ params["lm_head"].astype(x_last.dtype)
+    logits = shard(logits, "act_batch", "act_vocab")
+    cache = {"blocks": caches, "pos": jnp.int32(S)}
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, opts: ApplyOptions, params: dict,
+                cache: dict, batch: dict) -> Tuple[jax.Array, dict]:
+    """One decode step. Returns (logits [B,V], updated cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    pos = cache["pos"]
+    stacked_p = params["blocks"]
+    stacked_c = cache["blocks"]
+
+    def unit_decode(x_, sl_p, sl_c):
+        new_caches = []
+        for j, blk in enumerate(cfg.pattern):
+            x_, c = _block_apply_decode(cfg, opts, blk, sl_p[j], x_, sl_c[j],
+                                        pos)
+            new_caches.append(c)
+        return x_, tuple(new_caches)
+
+    if opts.scan_layers and cfg.num_repeats > 1:
+        def body(x_, xs):
+            sl_p, sl_c = xs
+            x_, new_c = unit_decode(x_, sl_p, sl_c)
+            return x_, new_c
+
+        x, new_caches = jax.lax.scan(body, x, (stacked_p, stacked_c))
+    else:
+        per_rep = []
+        for r in range(cfg.num_repeats):
+            sl_p = jax.tree_util.tree_map(lambda t: t[r], stacked_p)
+            sl_c = jax.tree_util.tree_map(lambda t: t[r], stacked_c)
+            x, new_c = unit_decode(x, sl_p, sl_c)
+            per_rep.append(new_c)
+        new_caches = jax.tree_util.tree_map(lambda *ts: jnp.stack(ts),
+                                            *per_rep)
+
+    x_last = rms_norm(x[:, 0], params["final_ln"], cfg.norm_eps)
+    logits = x_last @ params["lm_head"].astype(x_last.dtype)
+    logits = shard(logits, "act_batch", "act_vocab")
+    return logits, {"blocks": new_caches, "pos": pos + 1}

@@ -1,0 +1,156 @@
+"""Top-k MoE with GShard-style capacity dispatch (expert-parallel shardable).
+
+Tokens are reshaped into dispatch groups ``[G, gsz, D]`` (G sharded with the
+batch axes). Dispatch/combine are one-hot einsums so the whole layer is
+matmuls — TPU/MXU friendly and GSPMD generates the all-to-alls from the
+``[G,s,...] x [E,...]`` resharding. Experts are sharded on the ``model``
+axis when ``E`` divides it (phi3.5/jamba: 16e), otherwise the per-expert
+hidden dim is TP-sharded (granite: 40e, d_ff=512).
+
+Returns the load-balancing auxiliary loss (Switch-style) alongside outputs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import current_rules, shard
+from repro.models.layers import ParamDef, rms_norm, rms_norm_def
+
+
+def _expert_padding(E: int) -> int:
+    """Experts padded to the model-axis multiple so they shard (§Perf C2).
+
+    granite's 40 experts do not divide a 16-way model axis; with experts
+    unsharded, the 512-wide per-expert FFN is TP'd across 16 chips (32
+    columns each) and the backward all-reduces fp32 [E,G,C,D] d(expert_in)
+    over `model` — ~12 GB/chip/layer. Padding 40->48 dummy experts (zero
+    dispatch mass) makes E shardable: the expert GEMMs become fully local
+    and the AR disappears, for +20 % expert flops.
+    """
+    rules = current_rules()
+    if rules is None or "model" not in rules.mesh.axis_names:
+        return E
+    m = dict(zip(rules.mesh.axis_names,
+                 rules.mesh.devices.shape)).get("model", 1)
+    if m <= 1 or E % m == 0:
+        return E
+    return ((E + m - 1) // m) * m
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    mo = cfg.moe
+    D, E, F = cfg.d_model, mo.num_experts, mo.d_ff
+    defs = {
+        "ln": rms_norm_def(D, "d_model"),
+        "router": ParamDef((D, E), ("d_model", None)),
+        "w_up": ParamDef((E, D, F), ("experts", "d_model", "moe_ff")),
+        "w_down": ParamDef((E, F, D), ("experts", "moe_ff", "d_model")),
+    }
+    if mo.gated:
+        defs["w_gate"] = ParamDef((E, D, F), ("experts", "d_model", "moe_ff"))
+    return defs
+
+
+def _group_tokens(tokens: int, group_size: int) -> Tuple[int, int]:
+    """Pick (G, gsz) with G*gsz == tokens, gsz <= group_size, G maximal-ish."""
+    gsz = min(group_size, tokens)
+    while tokens % gsz:
+        gsz -= 1
+    return tokens // gsz, gsz
+
+
+def _capacity(gsz: int, top_k: int, num_experts: int, cf: float) -> int:
+    cap = int(gsz * top_k * cf / num_experts) + 1
+    cap = max(4, cap)
+    return min(gsz, (cap + 3) // 4 * 4)  # round up to 4, never above gsz
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (y, aux_loss)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    E, K = mo.num_experts, mo.top_k
+    tokens = B * S
+    G, gsz = _group_tokens(tokens, mo.group_size)
+    C = _capacity(gsz, K, E, mo.capacity_factor)
+
+    h = rms_norm(x, p["ln"], cfg.norm_eps) if "ln" in p else x
+    xg = h.reshape(G, gsz, D)
+    xg = shard(xg, "act_batch", None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)  # [G, s, E] fp32
+
+    # --- top-k slot-by-slot capacity assignment (GShard) ---
+    remaining = gates
+    counts = jnp.zeros((G, 1, E), jnp.float32)
+    dispatch = jnp.zeros((G, gsz, E, C), jnp.float32)
+    combine = jnp.zeros((G, gsz, E, C), jnp.float32)
+    topk_vals = []
+    for _ in range(K):
+        idx = jnp.argmax(remaining, axis=-1)  # [G, s]
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [G, s, E]
+        val = jnp.sum(remaining * onehot, axis=-1)  # [G, s]
+        topk_vals.append(val)
+        remaining = remaining * (1.0 - onehot)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts  # [G, s, E]
+        counts = counts + jnp.sum(onehot, axis=1, keepdims=True)
+        keep = onehot * (pos < C)  # capacity-dropped tokens vanish
+        slot = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)
+        d = keep[..., None] * slot  # [G, s, E, C]
+        dispatch = dispatch + d
+        combine = combine + d * val[..., None, None]
+
+    # normalize combine weights over the selected experts
+    denom = jnp.sum(combine, axis=(-1, -2), keepdims=True)
+    combine = combine / jnp.maximum(denom, 1e-9)
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+    # aux loss from the UNPADDED dispatch (padding below never routes mass)
+    frac_tokens = dispatch.sum(-1)  # [G, s, E]
+
+    # §Perf C2: pad experts so E shards on the model axis (no-op when E
+    # already divides it or no mesh rules are active)
+    E_pad = _expert_padding(E)
+    if E_pad != E:
+        padE = [(0, 0), (0, 0), (0, E_pad - E), (0, 0)]
+        dispatch = jnp.pad(dispatch, padE)
+        combine = jnp.pad(combine, padE)
+        padW = [(0, E_pad - E), (0, 0), (0, 0)]
+        w_up = shard(jnp.pad(p["w_up"], padW), "act_experts", None, None)
+        w_down = shard(jnp.pad(p["w_down"], padW), "act_experts", None,
+                       None)
+        w_gate = (shard(jnp.pad(p["w_gate"], padW), "act_experts", None,
+                        None) if mo.gated else None)
+    else:
+        w_up, w_down = p["w_up"], p["w_down"]
+        w_gate = p.get("w_gate")
+
+    dispatch_c = shard(dispatch.astype(cdt), "act_batch", None, None, None)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch_c, xg)
+    expert_in = shard(expert_in, "act_experts", "act_batch", None, None)
+    up = jnp.einsum("egcd,edf->egcf", expert_in, w_up)
+    if mo.gated:
+        act = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in, w_gate))
+        hmid = act * up
+    else:
+        hmid = jax.nn.gelu(up)
+    hmid = shard(hmid, "act_experts", "act_batch", None, "act_dff")
+    expert_out = jnp.einsum("egcf,efd->egcd", hmid, w_down)
+    expert_out = shard(expert_out, "act_experts", "act_batch", None, None)
+
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(cdt), expert_out)
+    y = shard(y.reshape(B, S, D), "act_batch", "act_seq_res", None)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    frac = jnp.mean(frac_tokens, axis=(0, 1))  # tokens routed per expert
+    prob = jnp.mean(gates, axis=(0, 1))
+    aux = E * jnp.sum(frac / jnp.maximum(jnp.sum(frac), 1e-9) * prob)
+    return y, aux.astype(jnp.float32)

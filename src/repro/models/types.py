@@ -1,0 +1,20 @@
+"""Runtime apply options (lowering-variant knobs, not architecture config)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyOptions:
+    # attention implementation:
+    #   "reference"        full-score jnp oracle (small shapes / cost artifact)
+    #   "blocked"          q-block scan, flash-style memory (default)
+    #   "pallas"           Pallas TPU kernel (TPU target)
+    #   "pallas_interpret" Pallas kernel in interpret mode (CPU validation)
+    attn_impl: str = "blocked"
+    block_q: int = 512
+    # unroll inner scans (q-blocks, ssm chunks) so cost_analysis() sees the
+    # whole compute: XLA counts While bodies ONCE, not x trip-count.
+    unroll: bool = False
+    # scan over layer repeats (False = unrolled layers, used by cost artifact)
+    scan_layers: bool = True

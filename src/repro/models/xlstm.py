@@ -1,0 +1,255 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM.
+
+mLSTM (matrix memory) is computed in a GLA-style chunkwise-parallel form:
+within a chunk, decayed attention-like scores (MXU matmuls); across chunks a
+`lax.scan` carries the matrix state C [B,H,dh,dh] and normalizer n [B,H,dh].
+Input gates are softcapped so the exponential gating stays in fp32 range
+without a running-max stabilizer (deviation from the paper's m_t stabilizer;
+noted in DESIGN.md).
+
+sLSTM (scalar memory, new-memory mixing) is inherently sequential: a
+`lax.scan` over time with the paper's m_t stabilizer. On TPU this serializes
+— the assigned xlstm-350m uses a 7:1 mLSTM:sLSTM pattern so mLSTM dominates.
+cost_analysis undercounts While-loop bodies; the roofline harness adds an
+analytic correction for sLSTM steps (see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import ParamDef, rms_norm, rms_norm_def
+from repro.models.types import ApplyOptions
+
+_SOFTCAP = 15.0
+
+
+def _softcap(x, cap=_SOFTCAP):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    x = cfg.xlstm
+    d_in = x.mlstm_expand * cfg.d_model
+    return d_in, x.num_heads, d_in // x.num_heads
+
+
+def mlstm_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    d_in, NH, _ = _mlstm_dims(cfg)
+    return {
+        "ln": rms_norm_def(D, "d_model"),
+        "up_proj": ParamDef((D, 2 * d_in), ("d_model", "d_inner")),
+        "wq": ParamDef((d_in, d_in), ("d_inner", None)),
+        "wk": ParamDef((d_in, d_in), ("d_inner", None)),
+        "wv": ParamDef((d_in, d_in), ("d_inner", None)),
+        "w_if": ParamDef((d_in, 2 * NH), ("d_inner", None)),
+        "gn": rms_norm_def(d_in, "d_inner"),
+        "down_proj": ParamDef((d_in, D), ("d_inner", "d_model")),
+    }
+
+
+def mlstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    _, NH, dh = _mlstm_dims(cfg)
+    return {
+        "C": ParamDef((batch, NH, dh, dh), ("act_batch", None, None, None),
+                      init="zeros", dtype="float32"),
+        "n": ParamDef((batch, NH, dh), ("act_batch", None, None),
+                      init="zeros", dtype="float32"),
+    }
+
+
+def _mlstm_qkv_gates(cfg, p, x):
+    d_in, NH, dh = _mlstm_dims(cfg)
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = h @ p["up_proj"]
+    up = shard(up, "act_batch", None, "act_dinner")
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q = (xi @ p["wq"]).reshape(B, S, NH, dh)
+    k = (xi @ p["wk"]).reshape(B, S, NH, dh) * (dh ** -0.5)
+    v = (xi @ p["wv"]).reshape(B, S, NH, dh)
+    gates = (xi @ p["w_if"]).astype(jnp.float32)  # [B,S,2*NH]
+    li = _softcap(gates[..., :NH])  # log input gate
+    lf = jax.nn.log_sigmoid(gates[..., NH:])  # log forget gate
+    return q, k, v, li, lf, z, xi
+
+
+def _mlstm_seq(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array):
+    B, S, D = x.shape
+    d_in, NH, dh = _mlstm_dims(cfg)
+    chunk = min(cfg.xlstm.chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n_chunks = S // chunk
+
+    q, k, v, li, lf, z, _ = _mlstm_qkv_gates(cfg, p, x)
+
+    def reshape_c(t):  # [B,S,...] -> [n_chunks, B, chunk, ...]
+        return t.reshape((B, n_chunks, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    def chunk_body(carry, xs):
+        C, n = carry  # [B,NH,dh,dh], [B,NH,dh]
+        qc, kc, vc, lic, lfc = xs  # [B,chunk,...]
+        q32, k32, v32 = (t.astype(jnp.float32) for t in (qc, kc, vc))
+        F = jnp.cumsum(lfc, axis=1)  # [B,chunk,NH] inclusive log-decay
+        # intra-chunk: D_ts = exp(F_t - F_s + li_s), s <= t
+        lD = F[:, :, None, :] - F[:, None, :, :] + lic[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lD = jnp.where(tri[None, :, :, None], lD, -jnp.inf)
+        Dm = jnp.exp(lD)  # [B,t,s,NH]
+        scores = jnp.einsum("bthd,bshd->btsh", q32, k32) * Dm
+        intra = jnp.einsum("btsh,bshd->bthd", scores, v32)
+        # inter-chunk from carried state
+        decay_t = jnp.exp(F)  # [B,chunk,NH]
+        inter = jnp.einsum("bthd,bhde->bthe", q32, C) * decay_t[..., None]
+        # normalizer
+        n_intra = jnp.einsum("btsh,bshd->bthd", Dm, k32)
+        n_t = decay_t[..., None] * n[:, None] + n_intra
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", q32, n_t)), 1.0)
+        y_c = (intra + inter) / denom[..., None]
+        # carry update
+        rev = jnp.exp(F[:, -1:, :] - F + lic)  # decay from s to chunk end
+        C_new = jnp.exp(F[:, -1])[..., None, None] * C + jnp.einsum(
+            "bshd,bshe->bhde", rev[..., None] * k32, v32)
+        n_new = jnp.exp(F[:, -1])[..., None] * n + jnp.einsum(
+            "bsh,bshd->bhd", rev, k32)
+        return (C_new, n_new), y_c.astype(x.dtype)
+
+    C0 = jnp.zeros((B, NH, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, NH, dh), jnp.float32)
+    (C_f, n_f), y_chunks = jax.lax.scan(
+        chunk_body, (C0, n0),
+        tuple(reshape_c(t) for t in (q, k, v, li, lf)),
+        unroll=n_chunks if opts.unroll else 1)
+    y = y_chunks.swapaxes(0, 1).reshape(B, S, d_in)
+    y = rms_norm(y, p["gn"], cfg.norm_eps) * jax.nn.silu(z)
+    y = shard(y, "act_batch", None, "act_dinner")
+    out = shard(y @ p["down_proj"], "act_batch", "act_seq_res", None)
+    return out, C_f, n_f
+
+
+def mlstm_apply(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                x: jax.Array) -> jax.Array:
+    return _mlstm_seq(cfg, opts, p, x)[0]
+
+
+def mlstm_prefill(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                  x: jax.Array) -> Tuple[jax.Array, dict]:
+    out, C_f, n_f = _mlstm_seq(cfg, opts, p, x)
+    return out, {"C": C_f, "n": n_f}
+
+
+def mlstm_decode(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array,
+                 cache: dict, pos: jax.Array) -> Tuple[jax.Array, dict]:
+    del pos
+    B = x.shape[0]
+    d_in, NH, dh = _mlstm_dims(cfg)
+    q, k, v, li, lf, z, _ = _mlstm_qkv_gates(cfg, p, x)
+    q32, k32, v32 = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    i_g = jnp.exp(li[:, 0])[..., None]  # [B,NH,1]
+    f_g = jnp.exp(lf[:, 0])[..., None]
+    C = f_g[..., None] * cache["C"] + i_g[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", k32, v32)
+    n = f_g * cache["n"] + i_g * k32
+    num = jnp.einsum("bhd,bhde->bhe", q32, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q32, n)), 1.0)
+    y = (num / denom[..., None]).reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(y, p["gn"], cfg.norm_eps) * jax.nn.silu(z)
+    return shard(y @ p["down_proj"], "act_batch", None, None), {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    h = int(cfg.xlstm.slstm_proj_factor * D)
+    return {
+        "ln": rms_norm_def(D, "d_model"),
+        "w_x": ParamDef((D, 4 * D), ("d_model", None)),
+        "w_h": ParamDef((D, 4 * D), ("d_model", None)),
+        "bias": ParamDef((4 * D,), (None,), init="zeros"),
+        "gn": rms_norm_def(D, "d_model"),
+        "up": ParamDef((D, h), ("d_model", "d_ff")),
+        "down": ParamDef((h, D), ("d_ff", "d_model")),
+    }
+
+
+def slstm_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    return {
+        k: ParamDef((batch, D), ("act_batch", None), init="zeros",
+                    dtype="float32")
+        for k in ("c", "n", "h", "m")
+    }
+
+
+def _slstm_step(p, D, carry, x_t):
+    """x_t: [B, 4D] precomputed input projection; carry: (c, n, h, m)."""
+    c, n, h, m = carry
+    gates = x_t + h.astype(x_t.dtype) @ p["w_h"] + p["bias"]
+    gates = gates.astype(jnp.float32)
+    li, lf_raw, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    li = _softcap(li)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    m_new = jnp.maximum(lf + m, li)
+    c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(li - m_new) * jnp.tanh(z_raw)
+    n_new = jnp.exp(lf + m - m_new) * n + jnp.exp(li - m_new)
+    h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_seq(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array):
+    B, S, D = x.shape
+    hx = rms_norm(x, p["ln"], cfg.norm_eps)
+    x_proj = hx @ p["w_x"]  # [B, S, 4D] — hoisted out of the scan
+    zeros = jnp.zeros((B, D), jnp.float32)
+    carry0 = (zeros, zeros, zeros, zeros - 1e30)
+
+    def body(carry, x_t):
+        return _slstm_step(p, D, carry, x_t)
+
+    carry_f, hs = jax.lax.scan(body, carry0, x_proj.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)  # [B, S, D]
+    y = rms_norm(y, p["gn"], cfg.norm_eps)
+    y = jax.nn.gelu(y @ p["up"]) @ p["down"]
+    return shard(y, "act_batch", "act_seq_res", None), carry_f
+
+
+def slstm_apply(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                x: jax.Array) -> jax.Array:
+    return _slstm_seq(cfg, opts, p, x)[0]
+
+
+def slstm_prefill(cfg: ModelConfig, opts: ApplyOptions, p: dict,
+                  x: jax.Array) -> Tuple[jax.Array, dict]:
+    y, (c, n, h, m) = _slstm_seq(cfg, opts, p, x)
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_decode(cfg: ModelConfig, opts: ApplyOptions, p: dict, x: jax.Array,
+                 cache: dict, pos: jax.Array) -> Tuple[jax.Array, dict]:
+    del pos
+    B, _, D = x.shape
+    hx = rms_norm(x, p["ln"], cfg.norm_eps)
+    x_proj = (hx @ p["w_x"])[:, 0]
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), h_out = _slstm_step(p, D, carry, x_proj)
+    y = h_out[:, None].astype(x.dtype)
+    y = rms_norm(y, p["gn"], cfg.norm_eps)
+    y = jax.nn.gelu(y @ p["up"]) @ p["down"]
+    y = shard(y, "act_batch", None, None)
+    return y, {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw_init_defs, adamw_update  # noqa: F401
+from repro.optim.schedule import lr_schedule  # noqa: F401

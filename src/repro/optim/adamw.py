@@ -1,0 +1,69 @@
+"""AdamW with fp32 moments, global-norm clipping and ZeRO-1 sharding.
+
+Optimizer state is described with ParamDefs derived from the parameter defs
+(same logical axes, fp32). Under ``TrainConfig.zero1`` the launcher maps the
+optimizer state through the ``fsdp_tp`` rules even when parameters use plain
+``tp`` — the weight-dim shards over ``data`` are exactly ZeRO-1; GSPMD emits
+the reduce-scatter/all-gather pair around the update.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.layers import ParamDef, is_def
+
+
+def adamw_init_defs(param_defs, moment_dtype: str = "float32") -> dict:
+    """ParamDef tree for optimizer state (m, v moments + step counter)."""
+    moment = lambda d: ParamDef(d.shape, d.axes, init="zeros",
+                                dtype=moment_dtype)
+    return {
+        "m": jax.tree_util.tree_map(moment, param_defs, is_leaf=is_def),
+        "v": jax.tree_util.tree_map(moment, param_defs, is_leaf=is_def),
+        "step": ParamDef((), (), init="zeros", dtype="int32"),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: TrainConfig, params, grads, opt_state,
+                 lr: jax.Array) -> Tuple[dict, dict, jax.Array]:
+    """Returns (new_params, new_opt_state, pre-clip grad norm)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd_math(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1.0 - b2) * jnp.square(g)
+        mhat = mf / c1
+        vhat = vf / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    upd = upd_math
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,18 @@
+"""Learning-rate schedules (warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(cfg: TrainConfig, step) -> jnp.ndarray:
+    step = jnp.asarray(step, jnp.float32)
+    if cfg.warmup_steps <= 0:
+        warm = jnp.float32(1.0)
+    else:
+        warm = jnp.minimum(1.0, (step + 1.0) / cfg.warmup_steps)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the real single CPU device — the 512
+# placeholder devices are ONLY for the dry-run (see launch/dryrun.py).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

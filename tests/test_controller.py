@@ -1,0 +1,93 @@
+"""PI controller: pole placement, tracking, anti-windup, stability."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controller import PIGains, pi_init, pi_step
+from repro.core.plant import PROFILES, plant_init, plant_step
+
+
+def _closed_loop(profile, epsilon, steps=120, seed=0, noise=True):
+    p = profile if noise else dataclasses.replace(
+        profile, noise_scale=0.0, power_noise=0.0, drop_prob=0.0)
+    gains = PIGains.from_model(p, epsilon)
+    ps, cs = plant_init(p), pi_init(gains)
+    key = jax.random.PRNGKey(seed)
+    pcap = p.pcap_max
+    prog, caps = [], []
+    for _ in range(steps):
+        key, k = jax.random.split(key)
+        ps, meas = plant_step(p, ps, pcap, 1.0, k)
+        cs, pcap = pi_step(gains, cs, meas["progress"], 1.0)
+        prog.append(float(meas["progress"]))
+        caps.append(float(pcap))
+    return np.asarray(prog), np.asarray(caps), gains
+
+
+def test_gains_pole_placement_formulas():
+    p = PROFILES["gros"]
+    g = PIGains.from_model(p, epsilon=0.1, tau_obj=10.0)
+    assert g.k_p == pytest.approx(p.tau / (p.K_L * 10.0))
+    assert g.k_i == pytest.approx(1.0 / (p.K_L * 10.0))
+    assert g.setpoint == pytest.approx(0.9 * p.progress_max)
+
+
+@pytest.mark.parametrize("name,eps", [("gros", 0.15), ("dahu", 0.10)])
+def test_tracking_converges(name, eps):
+    prog, caps, gains = _closed_loop(PROFILES[name], eps, steps=150)
+    tail = prog[80:]
+    assert abs(tail.mean() - gains.setpoint) < 0.1 * gains.setpoint
+    # power was actually reduced from max
+    assert caps[-1] < PROFILES[name].pcap_max * 0.95
+
+
+def test_no_oscillation_noise_free():
+    """Noise-free closed loop must settle monotonically-ish: late-window
+    variance shrinks (paper: 'neither oscillation nor degradation')."""
+    prog, caps, gains = _closed_loop(PROFILES["gros"], 0.15, noise=False)
+    early = np.var(prog[10:40])
+    late = np.var(prog[100:])
+    assert late < early * 0.5 + 1e-9
+    assert prog[100:].min() > gains.setpoint * 0.93  # no undershoot
+
+
+def test_anti_windup_unreachable_setpoint():
+    """eps<0 makes the setpoint unreachable: the command must pin at
+    pcap_max and recover quickly when the setpoint becomes feasible."""
+    p = dataclasses.replace(PROFILES["gros"], noise_scale=0.0,
+                            power_noise=0.0)
+    gains = PIGains.from_model(p, epsilon=-0.5)  # 150% of max: impossible
+    ps, cs = plant_init(p), pi_init(gains)
+    key = jax.random.PRNGKey(0)
+    pcap = p.pcap_max
+    for _ in range(50):
+        key, k = jax.random.split(key)
+        ps, meas = plant_step(p, ps, pcap, 1.0, k)
+        cs, pcap = pi_step(gains, cs, meas["progress"], 1.0)
+    assert float(pcap) == pytest.approx(p.pcap_max, rel=1e-3)
+    # now switch to a feasible setpoint: must converge (no wound-up lag)
+    gains2 = PIGains.from_model(p, epsilon=0.2)
+    for i in range(60):
+        key, k = jax.random.split(key)
+        ps, meas = plant_step(p, ps, pcap, 1.0, k)
+        cs, pcap = pi_step(gains2, cs, meas["progress"], 1.0)
+    assert abs(float(meas["progress"]) - gains2.setpoint) \
+        < 0.05 * gains2.setpoint
+
+
+@settings(max_examples=25, deadline=None)
+@given(eps=st.floats(0.02, 0.4), kl=st.floats(10.0, 200.0),
+       alpha=st.floats(0.02, 0.06), seed=st.integers(0, 100))
+def test_property_tracking_error_bounded(eps, kl, alpha, seed):
+    """Property: across random (plant, epsilon) the late tracking error is
+    bounded — the pole-placement design is robust over the model family."""
+    p = dataclasses.replace(PROFILES["gros"], K_L=kl, alpha=alpha,
+                            noise_scale=0.0, power_noise=0.0)
+    prog, caps, gains = _closed_loop(p, eps, steps=150, seed=seed,
+                                     noise=False)
+    tail = prog[100:]
+    assert abs(tail.mean() - gains.setpoint) < max(
+        0.05 * gains.setpoint, 0.5)

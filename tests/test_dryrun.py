@@ -1,0 +1,47 @@
+"""Dry-run integration: one real cell through the 512-device path.
+
+Runs in a subprocess because XLA_FLAGS must be set before jax init (the
+test session already holds a 1-device CPU backend)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_both_meshes(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "starcoder2-3b", "--shape", "decode_32k",
+           "--both-meshes", "--artifact", "full", "--out", str(tmp_path)]
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in ("XLA_FLAGS",)})
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    for mesh in ("16x16", "2x16x16"):
+        f = tmp_path / f"starcoder2-3b__decode_32k__{mesh}__full.json"
+        res = json.loads(f.read_text())
+        assert res["devices"] == (512 if mesh == "2x16x16" else 256)
+        assert res["cost_analysis"]["flops"] > 0
+        assert "temp_size_in_bytes" in res["memory_analysis"]
+
+
+def test_input_specs_are_abstract():
+    """input_specs() must allocate nothing (ShapeDtypeStruct only)."""
+    import jax
+    from repro.models import input_defs
+    from repro.models.layers import abstract
+    from repro.configs import get_config, get_shape
+    import jax.numpy as jnp
+    cfg = get_config("llama3-405b")
+    specs = abstract(input_defs(cfg, get_shape("train_4k")),
+                     jnp.dtype(cfg.compute_dtype))
+    for leaf in jax.tree_util.tree_leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    assert specs["tokens"].shape == (256, 4096)

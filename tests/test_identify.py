@@ -1,0 +1,78 @@
+"""Identification: Table 2 recovery from simulated campaigns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.identify import fit_dynamics, fit_rapl, fit_static, pearson
+from repro.core.plant import PROFILES, pcap_linearize, simulate
+
+
+def _campaign(profile, reps=3, levels=9, seed=1):
+    key = jax.random.PRNGKey(seed)
+    caps, powers, progs = [], [], []
+    for pcap in np.linspace(profile.pcap_min, profile.pcap_max, levels):
+        for _ in range(reps):
+            key, k = jax.random.split(key)
+            tr = simulate(profile, jnp.full((40,), float(pcap)), 1.0, k)
+            caps.append(float(pcap))
+            powers.append(float(np.mean(tr["power"][5:])))
+            progs.append(float(np.mean(tr["progress"][5:])))
+    return caps, powers, progs
+
+
+@pytest.mark.parametrize("name,tol", [("gros", 0.05), ("dahu", 0.08)])
+def test_static_fit_recovers_table2(name, tol):
+    p = PROFILES[name]
+    caps, powers, progs = _campaign(p)
+    fit = fit_static(caps, powers, progs)
+    assert fit.a == pytest.approx(p.a, rel=tol)
+    assert fit.b == pytest.approx(p.b, abs=2.0)
+    assert fit.K_L == pytest.approx(p.K_L, rel=tol)
+    assert fit.alpha == pytest.approx(p.alpha, rel=0.25)
+    assert fit.beta == pytest.approx(p.beta, abs=3.0)
+    assert fit.r2 > 0.95
+
+
+def test_noisy_multisocket_fit_degrades_gracefully():
+    """yeti: fit still works but R2 drops (paper §5: noisier with sockets)."""
+    p = PROFILES["yeti"]
+    caps, powers, progs = _campaign(p, reps=4)
+    fit = fit_static(caps, powers, progs)
+    assert fit.K_L == pytest.approx(p.K_L, rel=0.25)
+    assert 0.7 < fit.r2 <= 1.0
+
+
+def test_rapl_line_fit():
+    a, b = fit_rapl([40, 80, 120], [0.83 * 40 + 7, 0.83 * 80 + 7,
+                                    0.83 * 120 + 7])
+    assert a == pytest.approx(0.83, rel=1e-6)
+    assert b == pytest.approx(7.0, rel=1e-6)
+
+
+def test_dynamics_fit_recovers_tau():
+    p = PROFILES["gros"]
+    rng = np.random.default_rng(0)
+    sched = np.repeat(rng.uniform(40, 120, 120), 4)
+    tr = simulate(p, jnp.asarray(sched, jnp.float32), 1.0,
+                  jax.random.PRNGKey(2))
+    pl = np.asarray(pcap_linearize(p, jnp.asarray(sched)))
+    yl = np.asarray(tr["progress_clean"]) - p.K_L
+    tau, kl = fit_dynamics(pl, yl, 1.0)
+    assert tau == pytest.approx(p.tau, rel=0.05)
+    assert kl == pytest.approx(p.K_L, rel=0.05)
+
+
+def test_pearson_progress_exec_time():
+    """Progress correlates with completion rate (paper: 0.97 on gros)."""
+    p = PROFILES["gros"]
+    key = jax.random.PRNGKey(3)
+    rates, times = [], []
+    for pcap in np.linspace(40, 120, 9):
+        key, k = jax.random.split(key)
+        tr = simulate(p, jnp.full((60,), float(pcap)), 1.0, k)
+        mean_prog = float(np.mean(tr["progress"]))
+        rates.append(mean_prog)
+        times.append(1000.0 / max(mean_prog, 1e-6))  # time for fixed work
+    r = pearson(rates, [-t for t in times])
+    assert r > 0.9

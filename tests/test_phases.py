@@ -1,0 +1,31 @@
+"""Roofline-term phase classification + plant-profile seeding."""
+import pytest
+
+from repro.core.phases import (bottleneck, profile_for_cell, roofline_terms,
+                               saturation_ratio)
+
+
+def test_roofline_terms_units():
+    terms = roofline_terms(flops=197e12 * 256, bytes_hbm=819e9 * 256,
+                           bytes_ici=50e9 * 256, chips=256)
+    assert terms["compute_s"] == pytest.approx(1.0)
+    assert terms["memory_s"] == pytest.approx(1.0)
+    assert terms["collective_s"] == pytest.approx(1.0)
+
+
+def test_bottleneck_selection():
+    assert bottleneck({"compute_s": 3.0, "memory_s": 1.0,
+                       "collective_s": 0.1}) == "compute_s"
+    assert bottleneck({"compute_s": 0.1, "memory_s": 1.0,
+                       "collective_s": 0.5}) == "memory_s"
+
+
+def test_memory_bound_cell_gets_saturating_plant():
+    mem_bound = {"compute_s": 0.1, "memory_s": 1.0, "collective_s": 0.2}
+    comp_bound = {"compute_s": 1.0, "memory_s": 0.2, "collective_s": 0.1}
+    p_mem = profile_for_cell(mem_bound)
+    p_comp = profile_for_cell(comp_bound)
+    # memory-bound: knee earlier (higher alpha or lower beta)
+    assert p_mem.alpha > p_comp.alpha
+    assert p_mem.beta < p_comp.beta
+    assert saturation_ratio(mem_bound) > saturation_ratio(comp_bound)

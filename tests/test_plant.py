@@ -1,0 +1,64 @@
+"""Plant simulation: static model shape, dynamics, energy accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plant import (PROFILES, pcap_linearize, plant_init,
+                              plant_step, simulate)
+
+
+@pytest.mark.parametrize("name", ["gros", "dahu", "yeti", "v5e-chip"])
+def test_static_monotone_saturating(name):
+    p = PROFILES[name]
+    caps = jnp.linspace(p.pcap_min, p.pcap_max, 30)
+    prog = p.static_progress(caps)
+    diffs = jnp.diff(prog)
+    assert (diffs > 0).all()  # monotone increasing
+    # saturating: the marginal gain shrinks
+    assert float(diffs[-1]) < float(diffs[0])
+    assert float(prog[-1]) <= p.K_L
+
+
+def test_eq3_dynamics_match_closed_form():
+    """With noise off, plant_step must follow Eq. 3 exactly."""
+    import dataclasses
+    p = dataclasses.replace(PROFILES["gros"], noise_scale=0.0,
+                            power_noise=0.0, drop_prob=0.0)
+    state = plant_init(p, pcap0=120.0)
+    pl = pcap_linearize(p, 60.0)
+    w = 1.0 / (1.0 + p.tau)
+    expect = p.K_L * w * pl + (1 - w) * state.progress_l
+    new_state, meas = plant_step(p, state, 60.0, 1.0, jax.random.PRNGKey(0))
+    assert float(new_state.progress_l) == pytest.approx(float(expect),
+                                                        rel=1e-5)
+
+
+def test_energy_is_power_times_time():
+    import dataclasses
+    p = dataclasses.replace(PROFILES["gros"], noise_scale=0.0,
+                            power_noise=0.0)
+    tr = simulate(p, jnp.full((50,), 100.0), 2.0, jax.random.PRNGKey(1))
+    expected = float(p.power_of_pcap(100.0)) * 50 * 2.0
+    assert float(tr["energy"]) == pytest.approx(expected, rel=1e-5)
+
+
+def test_yeti_drops_occur():
+    p = PROFILES["yeti"]
+    tr = simulate(p, jnp.full((400,), 110.0), 1.0, jax.random.PRNGKey(2))
+    prog = np.asarray(tr["progress"])
+    assert prog.min() < 25.0  # drop events reach the ~10 Hz floor
+    assert prog.max() > 50.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(pcap=st.floats(40.0, 120.0), seed=st.integers(0, 1000))
+def test_linearization_roundtrip(pcap, seed):
+    """Property: Eq. 2 is invertible on the actuator range."""
+    from repro.core.controller import PIGains
+    p = PROFILES["dahu"]
+    g = PIGains.from_model(p, epsilon=0.1)
+    pl = g.linearize(pcap)
+    back = float(g.delinearize(pl))
+    assert back == pytest.approx(pcap, rel=1e-4, abs=1e-3)

@@ -1,0 +1,86 @@
+"""Sharding rules: divisibility fallback, dedupe, recipe behavior."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import make_rules, use_rules, shard
+from repro.models.layers import ParamDef
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single device, but axis SIZES matter for the spec logic -> use a
+    # fake 4x? can't: only 1 device. Use (1,1) and also test the pure
+    # resolution logic against a synthetic mesh-like below.
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec-resolution unit tests (no devices)."""
+
+    def __init__(self, shape, axes):
+        import numpy as np
+        self.axis_names = axes
+        self.devices = np.empty(shape, dtype=object)
+
+
+def test_divisible_dims_get_sharded():
+    rules = make_rules("tp", FakeMesh((16, 16), ("data", "model")))
+    spec = rules.spec(("d_model", "d_ff"), (4096, 12288))
+    assert spec == P(None, "model")
+
+
+def test_non_divisible_dim_falls_back_to_none():
+    rules = make_rules("tp", FakeMesh((16, 16), ("data", "model")))
+    # 24 heads % 16 != 0 -> unsharded
+    spec = rules.spec(("heads",), (24,))
+    assert spec == P(None)
+    assert not rules.dim_shardable("heads", 24)
+    assert rules.dim_shardable("heads", 32)
+
+
+def test_batch_prefix_fallback_multipod():
+    rules = make_rules("tp", FakeMesh((2, 16, 16), ("pod", "data", "model")))
+    # batch 256 divides pod*data=32 -> both axes
+    assert rules.spec(("act_batch",), (256,)) == P(("pod", "data"))
+    # batch 2 divides pod=2 only -> prefix fallback
+    assert rules.spec(("act_batch",), (2,)) == P("pod")
+    # batch 1 -> replicated
+    assert rules.spec(("act_batch",), (1,)) == P(None)
+
+
+def test_mesh_axis_never_assigned_twice():
+    rules = make_rules("tp", FakeMesh((16, 16), ("data", "model")))
+    # experts=16 takes 'model'; moe_ff must NOT also take it
+    spec = rules.spec(("experts", "d_model", "moe_ff"), (16, 1536, 512))
+    assert spec == P("model", None, None)
+    # experts=40 fails -> moe_ff picks up 'model'
+    spec = rules.spec(("experts", "d_model", "moe_ff"), (40, 1536, 512))
+    assert spec == P(None, None, "model")
+
+
+def test_fsdp_shards_weight_dmodel_on_data():
+    rules = make_rules("fsdp_tp", FakeMesh((16, 16), ("data", "model")))
+    spec = rules.spec(("d_model", "heads", "head_dim"), (16384, 128, 128))
+    assert spec == P("data", "model", None)
+
+
+def test_param_specs_tree(mesh):
+    rules = make_rules("tp", mesh)
+    defs = {"w": ParamDef((64, 128), ("d_model", "d_ff"))}
+    specs = rules.param_specs(defs)
+    assert specs["w"] == P(None, None)  # 1-device mesh: nothing sharded
+
+
+def test_shard_noop_without_rules():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shard(x, "act_batch", None) is x
+
+
+def test_shard_constraint_applies_in_context(mesh):
+    import jax.numpy as jnp
+    rules = make_rules("tp", mesh)
+    with use_rules(rules):
+        x = shard(jnp.ones((4, 4)), "act_batch", None)
+    assert x.shape == (4, 4)

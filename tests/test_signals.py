@@ -1,0 +1,64 @@
+"""Eq. 1 progress metric: unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.signals import (HeartbeatAggregator, progress_from_times,
+                                synth_heartbeats)
+
+
+def test_median_rate_uniform_beats():
+    hb = HeartbeatAggregator()
+    for i in range(1, 21):
+        hb.beat(i * 0.1)  # 10 Hz
+    assert hb.progress(2.1) == pytest.approx(10.0, rel=1e-6)
+
+
+def test_single_beat_per_period_uses_anchor():
+    hb = HeartbeatAggregator()
+    hb.beat(0.1)
+    hb.progress(0.2)
+    hb.beat(0.3)
+    assert hb.progress(0.4) == pytest.approx(1.0 / 0.2, rel=1e-6)
+
+
+def test_median_robust_to_outlier():
+    hb = HeartbeatAggregator()
+    t = 0.0
+    for i in range(9):
+        t += 0.1
+        hb.beat(t)
+    hb.beat(t + 5.0)  # one straggler beat
+    p = hb.progress(t + 5.1)
+    assert p == pytest.approx(10.0, rel=1e-6)  # median ignores the outlier
+
+
+def test_work_weighted_rate():
+    hb = HeartbeatAggregator()
+    for i in range(1, 11):
+        hb.beat(i * 0.5, work=512.0)  # 512 tokens every 0.5s
+    assert hb.progress(5.1) == pytest.approx(1024.0, rel=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(rate=st.floats(0.5, 500.0), jitter=st.floats(0.0, 0.3),
+       seed=st.integers(0, 2**31 - 1))
+def test_progress_tracks_true_rate(rate, jitter, seed):
+    """Property: for a jittered beat train the median rate is close to the
+    true rate (robustness of Eq. 1's median choice)."""
+    rng = np.random.default_rng(seed)
+    times = synth_heartbeats(rng, rate, duration=max(20.0 / rate, 2.0),
+                             jitter=jitter)
+    if len(times) < 8:
+        return
+    hb = HeartbeatAggregator()
+    for t in times:
+        hb.beat(t)
+    p = hb.progress(times[-1] + 1e-9)
+    # lognormal jitter biases the median of 1/dt upward by exp(sigma^2/2)-ish
+    assert p == pytest.approx(rate, rel=0.35 + jitter)
+
+
+def test_progress_from_times_matches_numpy():
+    times = np.cumsum(np.full(32, 0.25))
+    assert float(progress_from_times(times)) == pytest.approx(4.0, rel=1e-5)
