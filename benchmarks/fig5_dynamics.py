@@ -8,6 +8,7 @@ import numpy as np
 from benchmarks.common import Row, timed
 from repro.core.identify import fit_dynamics
 from repro.core.plant import PROFILES, pcap_linearize, simulate
+from repro.core.sim import replay_model
 
 
 def run(quick: bool = True):
@@ -22,14 +23,9 @@ def run(quick: bool = True):
     for name in ("gros", "dahu", "yeti"):
         p = PROFILES[name]
         us, tr = timed(lambda: simulate(p, sched, 1.0, jax.random.PRNGKey(7)))
-        # model prediction from Eq. 3 (replay the deterministic model)
+        # model prediction from Eq. 3 (jitted deterministic replay)
         pl = np.asarray(pcap_linearize(p, sched))
-        w = 1.0 / (1.0 + p.tau)
-        pred = np.zeros(len(sched))
-        y = float(pl[0]) * p.K_L
-        for i in range(len(sched)):
-            y = p.K_L * w * pl[i] + (1 - w) * y
-            pred[i] = y + p.K_L
+        pred = np.asarray(replay_model(p, sched, 1.0))
         meas = np.asarray(tr["progress"])
         err = meas - pred
         # drops/noise are the unmodeled part — mirror paper: mean ~ 0,

@@ -11,6 +11,11 @@ import traceback
 
 
 def main() -> None:
+    # persistent XLA cache: the sim/fleet scan engines compile once per
+    # machine; warm runs skip straight to execution
+    from repro.core.sim import enable_compilation_cache
+    enable_compilation_cache()
+
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true",
                    help="paper-scale repetition counts (slower)")

@@ -17,6 +17,7 @@ from repro.configs.base import PowerControlConfig
 from repro.core import PROFILES, fit_dynamics, fit_static, pcap_linearize, simulate
 from repro.core.hierarchy import FleetConfig, simulate_fleet
 from repro.core.nrm import NRM
+from repro.core.sim import sweep
 
 
 def identify(name: str):
@@ -41,12 +42,14 @@ def identify(name: str):
 
 
 def eps_sweep(name: str = "gros"):
-    print(f"epsilon sweep on {name} (total work fixed):")
-    for eps in (0.0, 0.05, 0.10, 0.20):
-        nrm = NRM(PowerControlConfig(epsilon=eps, plant_profile=name))
-        tr = nrm.run_simulated(total_work=2000.0, seed=int(eps * 100))
-        t, e = tr["t"][-1], tr["energy"][-1]
-        print(f"  eps={eps:4.2f}: time={t:6.1f}s energy={e:7.0f}J")
+    print(f"epsilon sweep on {name} (total work fixed, one vmapped scan):")
+    eps_grid = (0.0, 0.05, 0.10, 0.20)
+    res = sweep(name, eps_grid, seeds=range(3), total_work=2000.0)
+    t = np.asarray(res.exec_time).mean(axis=1)
+    e = np.asarray(res.energy).mean(axis=1)
+    for i, eps in enumerate(eps_grid):
+        print(f"  eps={eps:4.2f}: time={t[i]:6.1f}s energy={e[i]:7.0f}J"
+              f" (mean of 3 seeds)")
 
 
 def adaptive_demo():

@@ -8,3 +8,5 @@ from repro.core.plant import (PROFILES, PlantProfile, PlantState,  # noqa: F401
                               pcap_linearize, plant_init, plant_step,
                               simulate)
 from repro.core.signals import HeartbeatAggregator, progress_from_times  # noqa: F401
+from repro.core.sim import (SimResult, SweepResult, replay_model,  # noqa: F401
+                            simulate_closed_loop, sweep)

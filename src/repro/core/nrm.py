@@ -22,10 +22,11 @@ import dataclasses
 from typing import Callable, Dict, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import PowerControlConfig
-from repro.core.controller import PIController, PIGains
+from repro.core.controller import PIController, PIGains, PIState
 from repro.core.plant import PROFILES, PlantProfile, plant_init, plant_step
 from repro.core.signals import HeartbeatAggregator
 
@@ -141,8 +142,48 @@ class NRM:
     # ---- full simulated run (paper evaluation setup) -----------------------
     def run_simulated(self, total_work: float, max_time: float = 3600.0,
                       seed: int = 0) -> Dict[str, np.ndarray]:
-        """Closed loop against the simulated plant until work completes."""
+        """Closed loop against the simulated plant until work completes.
+
+        Delegates to the jitted `repro.core.sim` scan engine (one compiled
+        step fusing plant, heartbeat window and PI command); the Python
+        loop below remains only for the adaptive (RLS) path, whose numpy
+        estimator state cannot live inside a scan. NRM/actuator state
+        (controller, plant, last measurement, RNG) is threaded through,
+        so repeated calls continue where the last run stopped."""
         assert isinstance(self.actuator, SimulatedPowerActuator)
+        if self._adaptive is None:
+            from repro.core import sim
+            init = sim.resume_init(self.actuator.state,
+                                   self.controller.state,
+                                   self.actuator._pcap)
+            res = sim.simulate_closed_loop(
+                self.actuator.profile, gains=self.gains,
+                total_work=total_work, max_time=max_time,
+                dt=self.cfg.sampling_period, seed=seed, init=init)
+            self._t = res.exec_time
+            self.controller.state = PIState(
+                prev_error=jnp.float32(res.pi_state.prev_error),
+                prev_pcap_l=jnp.float32(res.pi_state.prev_pcap_l))
+            self.actuator.state = jax.tree_util.tree_map(
+                jnp.asarray, res.plant_state)
+            self.actuator._pcap = res.pcap
+            if res.n_steps:
+                self.actuator._last_meas = {
+                    "power": float(res.traces["power"][-1]),
+                    "progress": float(res.traces["progress"][-1]),
+                    "pcap": res.pcap,
+                }
+            # advance the actuator's RNG past this run so a later
+            # advance()-based step doesn't replay the engine's noise
+            self.actuator._key = jax.random.fold_in(
+                jax.random.fold_in(self.actuator._key, seed), res.n_steps)
+            return res.traces
+        return self._run_simulated_python(total_work, max_time, seed)
+
+    def _run_simulated_python(self, total_work: float,
+                              max_time: float = 3600.0,
+                              seed: int = 0) -> Dict[str, np.ndarray]:
+        """Reference per-step loop (adaptive path + equivalence tests)."""
         rng = np.random.default_rng(seed)
         dt = self.cfg.sampling_period
         traces = {"t": [], "progress": [], "pcap": [], "power": [],

@@ -44,8 +44,10 @@ class HeartbeatAggregator:
         all_beats = list(self._times)
         if not all_beats:
             return 0.0
+        # half-open [last_emit, t_i): a beat landing exactly on a control
+        # period edge belongs to the NEXT window, never to both
         in_win = [i for i, (t, _) in enumerate(all_beats)
-                  if (lo is None or t >= lo) and t <= t_i]
+                  if (lo is None or t >= lo) and t < t_i]
         rates = []
         for i in in_win:
             if i == 0:

@@ -1,0 +1,387 @@
+"""Fused closed-loop simulation engine (paper Figs. 5-7 at fleet scale).
+
+The paper's evaluation is thousands of closed-loop runs sweeping the
+degradation grid eps across clusters and seeds. `NRM.run_simulated` used
+to drive ONE run as a Python while-loop with per-step jit dispatch; this
+module fuses the whole loop — plant dynamics (Eq. 3 + noise), heartbeat
+aggregation over the control window (Eq. 1 median) and the PI command
+(Eq. 4) — into a single `lax.scan` step. Plant and gain parameters enter
+the compiled function as traced arrays, so ONE compilation (keyed only by
+the scan length) serves every profile, epsilon and seed.
+
+Entry points:
+
+* `simulate_closed_loop(profile, ...)` — one run; trimmed numpy traces
+  compatible with the old `NRM.run_simulated` return value.
+* `sweep(profiles, epsilons, seeds, ...)` — vmapped profiles x epsilons
+  x seeds grid in one compiled call; the substrate for Fig. 6/7 and
+  paper-scale (30-rep, full eps-grid) sweeps in CI-feasible time.
+* `replay_model(profile, pcaps, dt)` — deterministic Eq. 3 replay (the
+  Fig. 5 model-accuracy baseline).
+
+Runs finish by early-exit-by-mask: once accumulated work reaches
+`total_work` the carried state freezes and the remaining scan steps are
+no-ops; the `valid` trace marks live steps.
+
+Heartbeats: the sim path synthesizes n ~ Poisson(rate * dt) evenly
+spaced beats per control period (exactly what `NRM.run_simulated` fed
+the `HeartbeatAggregator`), so Eq. 1's median over the half-open window
+has a closed form: n - 1 equal in-window rates of n/dt plus one anchor
+rate spanning the window edge — see `_window_median`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from pathlib import Path
+from typing import Dict, NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import PIGains, PIState, pi_init, pi_step
+from repro.core.plant import (PROFILES, PlantProfile, PlantState,
+                              pcap_linearize, plant_init, plant_step,
+                              simulate)
+
+
+def enable_compilation_cache(path: Optional[str] = None) -> None:
+    """Point XLA's persistent compilation cache at a repo-local dir so the
+    scan engine compiles once per machine, not once per process. Called by
+    tests/conftest.py and benchmarks/run.py; override the location with
+    $REPRO_XLA_CACHE. Safe to call repeatedly."""
+    path = path or os.environ.get("REPRO_XLA_CACHE") or str(
+        Path(__file__).resolve().parents[3] / "experiments" / "xla_cache")
+    Path(path).mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(path))
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+
+
+def _bucket_steps(n: int) -> int:
+    """Round the scan length up to a power of two (min 256). Frozen steps
+    after completion are no-ops, and `max_time` is enforced by a traced
+    mask, so the only effect is that compiled engines are shared across
+    nearby horizons (and across processes via the persistent cache)."""
+    b = 256
+    while b < n:
+        b *= 2
+    return b
+
+# Canonical packing order for traced plant / gain parameters.
+_PROFILE_FIELDS = ("a", "b", "alpha", "beta", "K_L", "tau", "pcap_min",
+                   "pcap_max", "n_sockets", "noise_scale", "power_noise",
+                   "drop_prob", "drop_exit_prob", "drop_level")
+_GAIN_FIELDS = ("k_p", "k_i", "setpoint", "pcap_min", "pcap_max",
+                "a", "b", "alpha", "beta")
+
+
+def profile_values(profile: PlantProfile) -> jnp.ndarray:
+    return jnp.asarray([getattr(profile, f) for f in _PROFILE_FIELDS],
+                       jnp.float32)
+
+
+def gains_values(gains: PIGains) -> jnp.ndarray:
+    return jnp.asarray([getattr(gains, f) for f in _GAIN_FIELDS],
+                       jnp.float32)
+
+
+def _unpack_profile(vals) -> PlantProfile:
+    kw = {f: vals[i] for i, f in enumerate(_PROFILE_FIELDS)}
+    return PlantProfile(name="_traced", **kw)
+
+
+def _unpack_gains(vals) -> PIGains:
+    return PIGains(**{f: vals[i] for i, f in enumerate(_GAIN_FIELDS)})
+
+
+def _resolve(profile: Union[str, PlantProfile]) -> PlantProfile:
+    return PROFILES[profile] if isinstance(profile, str) else profile
+
+
+def _window_median(n, anchor_gap, has_anchor, dt):
+    """Closed-form Eq. 1 median for n evenly spaced beats in one period.
+
+    The window holds n beats at spacing dt/n; the first interval reaches
+    back to the previous window's last beat (`anchor_gap` before the
+    window start), so the rate multiset is {rate_first} + (n-1) x {n/dt}.
+    With no anchor (no beat has ever fired) the first interval is
+    undefined and the multiset is just (n-1) x {n/dt}.
+    """
+    nf = jnp.maximum(n.astype(jnp.float32), 1.0)
+    r = n.astype(jnp.float32) / dt
+    first_int = anchor_gap + 0.5 * dt / nf
+    r_first = 1.0 / jnp.maximum(first_int, 1e-9)
+    with_anchor = jnp.where(n >= 3, r,
+                            jnp.where(n == 2, 0.5 * (r + r_first),
+                                      jnp.where(n == 1, r_first, 0.0)))
+    no_anchor = jnp.where(n >= 2, r, 0.0)
+    return jnp.where(has_anchor, with_anchor, no_anchor)
+
+
+class _Carry(NamedTuple):
+    plant: PlantState
+    pi: PIState
+    pcap: jnp.ndarray        # command applied next period [W]
+    anchor_gap: jnp.ndarray  # time from last beat to window start [s]
+    has_anchor: jnp.ndarray  # bool: any beat ever fired
+    t: jnp.ndarray           # simulated time [s]
+    done: jnp.ndarray        # bool: total_work reached
+
+
+def _default_init(profile: PlantProfile, gains: PIGains) -> _Carry:
+    return _Carry(plant=plant_init(profile),
+                  pi=pi_init(gains),
+                  pcap=jnp.float32(profile.pcap_max),
+                  anchor_gap=jnp.float32(0.0),
+                  has_anchor=jnp.array(False),
+                  t=jnp.float32(0.0),
+                  done=jnp.array(False))
+
+
+def resume_init(plant: PlantState, pi: PIState, pcap) -> _Carry:
+    """Carry that resumes a run from existing plant/controller state (the
+    NRM delegation path); the heartbeat window starts fresh."""
+    return _Carry(plant=plant, pi=pi, pcap=jnp.float32(pcap),
+                  anchor_gap=jnp.float32(0.0),
+                  has_anchor=jnp.array(False),
+                  t=jnp.float32(0.0),
+                  done=jnp.array(False))
+
+
+def _scan_core(max_steps: int):
+    """Pure closed-loop run: (profile_vals, gains_vals, init|None,
+    total_work, max_time, dt, key) -> (traces, final_carry)."""
+
+    def run(profile_vals, gains_vals, init: Optional[_Carry], total_work,
+            max_time, dt, key):
+        profile = _unpack_profile(profile_vals)
+        gains = _unpack_gains(gains_vals)
+        carry0 = _default_init(profile, gains) if init is None else init
+
+        def body(c: _Carry, k):
+            kplant, khb = jax.random.split(k)
+            plant_s, meas = plant_step(profile, c.plant, c.pcap, dt, kplant)
+            t = c.t + dt
+            # synthesize heartbeats at the measured rate (Eq. 1 input)
+            n = jax.random.poisson(khb, jnp.maximum(meas["progress"], 0.0)
+                                   * dt)
+            progress = _window_median(n, c.anchor_gap, c.has_anchor, dt)
+            anchor_gap = jnp.where(n > 0,
+                                   0.5 * dt / jnp.maximum(
+                                       n.astype(jnp.float32), 1.0),
+                                   c.anchor_gap + dt)
+            has_anchor = c.has_anchor | (n > 0)
+            pi_s, pcap = pi_step(gains, c.pi, progress, dt)
+
+            # early-exit-by-mask: freeze everything once done
+            frz = lambda new, old: jax.tree_util.tree_map(
+                lambda a, b: jnp.where(c.done, b, a), new, old)
+            plant_s = frz(plant_s, c.plant)
+            pi_s = frz(pi_s, c.pi)
+            pcap = jnp.where(c.done, c.pcap, pcap)
+            anchor_gap = jnp.where(c.done, c.anchor_gap, anchor_gap)
+            has_anchor = jnp.where(c.done, c.has_anchor, has_anchor)
+            t = jnp.where(c.done, c.t, t)
+            progress = jnp.where(c.done, 0.0, progress)
+            power = jnp.where(c.done, 0.0, meas["power"])
+
+            done = (c.done | (plant_s.work >= total_work)
+                    | (t >= max_time - 1e-6))
+            out = {"t": t, "progress": progress, "pcap": pcap,
+                   "power": power, "energy": plant_s.energy,
+                   "work": plant_s.work, "valid": ~c.done}
+            return _Carry(plant_s, pi_s, pcap, anchor_gap, has_anchor,
+                          t, done), out
+
+        keys = jax.random.split(key, max_steps)
+        final, traces = jax.lax.scan(body, carry0, keys)
+        return traces, final
+
+    return run
+
+
+# `init` is a pytree (or None); jit caches on its structure, so the None
+# (fresh run) and _Carry (resumed run) variants trace separately.
+@functools.lru_cache(maxsize=None)
+def _jit_run(max_steps: int):
+    return jax.jit(_scan_core(max_steps))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_sweep(max_steps: int):
+    run = _scan_core(max_steps)
+    f = lambda pv, gv, tw, mt, dt, key: run(pv, gv, None, tw, mt, dt, key)
+    f = jax.vmap(f, in_axes=(None, None, None, None, None, 0))  # seeds
+    f = jax.vmap(f, in_axes=(None, 0, None, None, None, None))  # epsilons
+    f = jax.vmap(f, in_axes=(0, 0, None, None, None, None))     # profiles
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_open_loop(steps: int):
+    def run(profile_vals, pcap, dt, key):
+        profile = _unpack_profile(profile_vals)
+        return simulate(profile, jnp.full((steps,), pcap), dt, key)
+
+    return jax.jit(jax.vmap(run, in_axes=(None, None, None, 0)))
+
+
+def open_loop_runs(profile: Union[str, PlantProfile], steps: int,
+                   seeds: Sequence[int], pcap: Optional[float] = None,
+                   dt: float = 1.0) -> dict:
+    """Constant-cap open-loop runs vmapped over seeds (the uncontrolled
+    full-power baseline of Fig. 7). One compile per trace length, shared
+    across profiles."""
+    profile = _resolve(profile)
+    pcap = profile.pcap_max if pcap is None else pcap
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    return _jit_open_loop(int(steps))(profile_values(profile),
+                                      jnp.float32(pcap), jnp.float32(dt),
+                                      keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """One closed-loop run, trimmed to the completed steps."""
+    traces: Dict[str, np.ndarray]  # t, progress, pcap, power, energy, work
+    exec_time: float
+    energy: float
+    work: float
+    completed: bool
+    n_steps: int
+    pi_state: PIState
+    plant_state: PlantState
+    pcap: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Batched runs over profiles x epsilons x seeds.
+
+    Trace arrays have shape (..., T) where ... is (P, E, S) — the P axis
+    is squeezed away when a single profile was passed. Frozen (post-
+    completion) steps carry `valid == False`.
+    """
+    traces: Dict[str, jnp.ndarray]
+    exec_time: jnp.ndarray
+    energy: jnp.ndarray
+    work: jnp.ndarray
+    completed: jnp.ndarray
+    n_steps: jnp.ndarray
+
+    def masked_mean(self, key: str) -> np.ndarray:
+        """Per-run mean of a trace over its live steps."""
+        x = np.asarray(self.traces[key])
+        m = np.asarray(self.traces["valid"])
+        return (x * m).sum(-1) / np.maximum(m.sum(-1), 1)
+
+
+def simulate_closed_loop(profile: Union[str, PlantProfile],
+                         epsilon: Optional[float] = None, *,
+                         gains: Optional[PIGains] = None,
+                         total_work: float,
+                         max_time: float = 3600.0,
+                         dt: float = 1.0,
+                         seed: int = 0,
+                         key: Optional[jax.Array] = None,
+                         tau_obj: float = 10.0,
+                         init: Optional[_Carry] = None) -> SimResult:
+    """One fully-jitted closed-loop run (drop-in for NRM.run_simulated).
+
+    Pass either `epsilon` (gains placed from the profile's identified
+    model) or explicit `gains` (e.g. designed on a different profile, as
+    in the gain-shift experiments)."""
+    profile = _resolve(profile)
+    if gains is None:
+        if epsilon is None:
+            raise ValueError("pass epsilon or gains")
+        gains = PIGains.from_model(profile, epsilon, tau_obj)
+    max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    traces, final = _jit_run(max_steps)(
+        profile_values(profile), gains_values(gains), init,
+        jnp.float32(total_work), jnp.float32(max_time), jnp.float32(dt),
+        key)
+    n = int(np.asarray(traces["valid"]).sum())
+    trimmed = {k: np.asarray(v)[:n] for k, v in traces.items()
+               if k != "valid"}
+    return SimResult(traces=trimmed,
+                     exec_time=float(final.t),
+                     energy=float(final.plant.energy),
+                     work=float(final.plant.work),
+                     completed=bool(final.plant.work >= total_work),
+                     n_steps=n,
+                     pi_state=jax.tree_util.tree_map(np.asarray, final.pi),
+                     plant_state=jax.tree_util.tree_map(np.asarray,
+                                                        final.plant),
+                     pcap=float(final.pcap))
+
+
+def sweep(profiles: Union[str, PlantProfile,
+                          Sequence[Union[str, PlantProfile]]],
+          epsilons: Sequence[float],
+          seeds: Sequence[int],
+          total_work: float,
+          max_time: float = 3600.0,
+          dt: float = 1.0,
+          tau_obj: float = 10.0) -> SweepResult:
+    """Vmapped closed-loop grid: profiles x epsilons x seeds, one compile.
+
+    The compiled function is cached by scan length only — plant and gain
+    parameters are traced — so repeated sweeps over different profiles or
+    epsilon grids reuse the same executable."""
+    single = isinstance(profiles, (str, PlantProfile))
+    profs = [_resolve(p) for p in ([profiles] if single else profiles)]
+    eps = [float(e) for e in epsilons]
+    seeds = [int(s) for s in seeds]
+    if not (profs and eps and seeds):
+        raise ValueError("sweep needs at least one profile, epsilon and "
+                         "seed")
+    pv = jnp.stack([profile_values(p) for p in profs])
+    gv = jnp.stack([
+        jnp.stack([gains_values(PIGains.from_model(p, e, tau_obj))
+                   for e in eps]) for p in profs])
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
+    traces, final = _jit_sweep(max_steps)(
+        pv, gv, jnp.float32(total_work), jnp.float32(max_time),
+        jnp.float32(dt), keys)
+    if single:
+        traces = {k: v[0] for k, v in traces.items()}
+        final = jax.tree_util.tree_map(lambda x: x[0], final)
+    return SweepResult(traces=traces,
+                       exec_time=final.t,
+                       energy=final.plant.energy,
+                       work=final.plant.work,
+                       completed=final.plant.work >= total_work,
+                       n_steps=traces["valid"].sum(-1))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_replay():
+    def replay(profile_vals, pcaps, dt):
+        profile = _unpack_profile(profile_vals)
+        pl = pcap_linearize(profile, pcaps)
+        w = dt / (dt + profile.tau)
+
+        def body(y, u):
+            y = profile.K_L * w * u + (1.0 - w) * y
+            return y, y
+
+        _, ys = jax.lax.scan(body, pl[0] * profile.K_L, pl)
+        return ys + profile.K_L
+
+    return jax.jit(replay)
+
+
+def replay_model(profile: Union[str, PlantProfile], pcaps, dt: float = 1.0
+                 ) -> jnp.ndarray:
+    """Deterministic Eq. 3 replay of a pcap schedule (noise-free model
+    prediction, the Fig. 5 accuracy baseline)."""
+    profile = _resolve(profile)
+    return _jit_replay()(profile_values(profile),
+                         jnp.asarray(pcaps, jnp.float32), jnp.float32(dt))

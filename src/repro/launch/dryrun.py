@@ -110,6 +110,15 @@ def _lower_compile(cfg: ModelConfig, shape: ShapeConfig, mesh,
     return compiled, t_lower, t_compile
 
 
+def _cost_dict(compiled) -> dict:
+    """Normalized cost_analysis: newer jaxlibs return a single-element
+    list of dicts (one per executable), older ones a bare dict or None."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else {}
+
+
 def _memory_dict(compiled) -> dict:
     try:
         ma = compiled.memory_analysis()
@@ -154,7 +163,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     if artifact == "full":
         compiled, t_lower, t_compile = _lower_compile(cfg, shape, mesh,
                                                       "full")
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_dict(compiled)
         mem = _memory_dict(compiled)
         hlo = compiled.as_text()
         cstats = collective_stats(hlo)
@@ -179,7 +188,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         ccfg = _cost_cfg(cfg, repeats)
         compiled, t_lower, t_compile = _lower_compile(ccfg, shape, mesh,
                                                       "cost")
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_dict(compiled)
         hlo = compiled.as_text()
         cstats = collective_stats(hlo)
         per[repeats] = {

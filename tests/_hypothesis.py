@@ -1,0 +1,68 @@
+"""`hypothesis` if installed, else a deterministic sampling fallback.
+
+The property tests import ``given``/``settings``/``st`` from here so the
+suite collects and runs on machines without hypothesis (the image bakes
+the jax toolchain only). The fallback draws a fixed number of seeded
+pseudo-random examples per test — weaker than hypothesis (no shrinking,
+no edge-case bias) but it keeps the properties exercised everywhere.
+Install the real thing with ``pip install -r requirements-dev.txt``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _MAX_FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    st = _Strategies()
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0xC0FFEE)
+                n = min(getattr(wrapper, "_max_examples", 10),
+                        _MAX_FALLBACK_EXAMPLES)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng)
+                             for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # hide the drawn parameters from pytest's fixture resolution
+            # (no functools.wraps: __wrapped__ would re-expose them)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            return wrapper
+        return deco

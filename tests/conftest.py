@@ -5,6 +5,18 @@ import pytest
 # placeholder devices are ONLY for the dry-run (see launch/dryrun.py).
 jax.config.update("jax_platform_name", "cpu")
 
+# Share compiled scan engines across processes (and with benchmarks/run.py)
+from repro.core.sim import enable_compilation_cache  # noqa: E402
+
+enable_compilation_cache()
+
+
+def pytest_configure(config):
+    # also declared in pyproject.toml; registering here keeps the mark
+    # known when pytest is invoked with an explicit -c elsewhere
+    config.addinivalue_line(
+        "markers", "slow: slow compile/integration tests")
+
 
 @pytest.fixture(scope="session")
 def rng_key():

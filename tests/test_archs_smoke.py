@@ -56,7 +56,10 @@ def test_one_train_step(arch):
                           jnp.float32)
         batch = _batch(cfg, 2, 32, key)
         batch.pop("tokens", None) if cfg.input_mode == "embeds" else None
-        before = jax.tree_util.tree_map(lambda t: np.asarray(t), params)
+        # explicit copy: params are donated below, and np.asarray can be a
+        # zero-copy view of the very buffer XLA will overwrite in place
+        before = jax.tree_util.tree_map(lambda t: np.array(t, copy=True),
+                                        params)
         jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                       donate_argnums=(0, 1))
         new_params, new_opt, metrics = jfn(params, opt, batch)

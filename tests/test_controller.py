@@ -4,7 +4,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis import given, settings, st
 
 from repro.core.controller import PIGains, pi_init, pi_step
 from repro.core.plant import PROFILES, plant_init, plant_step

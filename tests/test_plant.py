@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis import given, settings, st
 
 from repro.core.plant import (PROFILES, pcap_linearize, plant_init,
                               plant_step, simulate)

@@ -1,7 +1,7 @@
 """Eq. 1 progress metric: unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis import given, settings, st
 
 from repro.core.signals import (HeartbeatAggregator, progress_from_times,
                                 synth_heartbeats)
@@ -31,6 +31,20 @@ def test_median_robust_to_outlier():
     hb.beat(t + 5.0)  # one straggler beat
     p = hb.progress(t + 5.1)
     assert p == pytest.approx(10.0, rel=1e-6)  # median ignores the outlier
+
+
+def test_boundary_beat_counted_in_one_window_only():
+    """Regression: a beat landing exactly on the control-period edge must
+    belong to the NEXT window ([last_emit, t_i) is half-open), not both."""
+    hb = HeartbeatAggregator()
+    hb.beat(0.5)
+    hb.beat(1.0)
+    # window [-inf, 1.0): only the 0.5 beat, which has no anchor -> 0
+    assert hb.progress(1.0) == 0.0
+    # window [1.0, 2.0): the boundary beat, anchored at 0.5 -> 2 Hz,
+    # counted exactly once
+    assert hb.progress(2.0) == pytest.approx(2.0, rel=1e-6)
+    assert hb.progress(3.0) == 0.0
 
 
 def test_work_weighted_rate():
