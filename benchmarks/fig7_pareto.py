@@ -3,7 +3,9 @@ headline result: eps=0.1 on gros ~22% energy saved for ~7% slowdown;
 eps > 0.15 not worth it; yeti too noisy).
 
 The whole epsilon x seed grid for both clusters runs as ONE vmapped
-`lax.scan` call (repro.core.sim.sweep); the full-power baseline is a
+`lax.scan` call (repro.core.sim.sweep) in trace-free summary mode — the
+per-run means it needs are reduced online in the scan carry, so memory
+stays O(grid) instead of O(grid * horizon). The full-power baseline is a
 vmapped open-loop simulation. Quick mode is ~5 eps x 3 seeds; --full is
 the paper-scale grid (11 eps x 30 reps), CI-feasible only because of the
 batched engine."""
@@ -44,12 +46,13 @@ def run(quick: bool = True):
     # does not dilute steady-state savings; the slowest cell (eps=0.5)
     # finishes well under 600 s, so 2000 s of horizon is ample
     res = sweep(names, eps_grid, range(reps), total_work=TOTAL_WORK,
-                max_time=2000.0)
+                max_time=2000.0, collect_traces=False)
+    assert res.traces is None  # summary mode: no per-step buffers
     assert bool(np.asarray(res.completed).all())
     exec_time = np.asarray(res.exec_time)
     energy = np.asarray(res.energy)
-    mean_prog = res.masked_mean("progress")
-    mean_power = res.masked_mean("power")
+    mean_prog = np.asarray(res.summary["progress_mean"])
+    mean_power = np.asarray(res.summary["power_mean"])
     for pi, name in enumerate(names):
         t_max, e_max = _baseline(PROFILES[name], reps)
         runs, pts = [], []

@@ -24,7 +24,7 @@ def main() -> None:
 
     from benchmarks import (beyond_adaptive, fig3_system_analysis,
                             fig4_static, fig5_dynamics, fig6_control,
-                            fig7_pareto, roofline)
+                            fig7_pareto, roofline, telemetry)
     modules = {
         "fig3": fig3_system_analysis,
         "fig4": fig4_static,
@@ -33,6 +33,9 @@ def main() -> None:
         "fig7": fig7_pareto,
         "beyond": beyond_adaptive,
         "roofline": roofline,
+        # last: times the flagship engine workloads and writes the
+        # machine-readable BENCH_sim.json perf record at the repo root
+        "telemetry": telemetry,
     }
     failed = False
     print("name,us_per_call,derived")

@@ -1,0 +1,95 @@
+"""Machine-readable perf telemetry: times the engine's flagship workloads
+and writes BENCH_sim.json at the repo root, so the perf trajectory stays
+comparable across PRs without parsing benchmark stdout.
+
+Entries (each with first-call and warm wall time plus runs/sec):
+
+* ``fig7_sweep``     — the quick Fig. 7 grid (2 profiles x 5 eps x 3
+  seeds, summary mode).
+* ``adaptive_grid``  — an RLS hyperparameter grid (eps x lambda x seeds,
+  summary mode) through the adaptive scan engine.
+* ``fleet_64`` / ``fleet_1024`` — the two-level fleet run at both scales.
+
+"cold" is the first in-process call: with a warm persistent XLA cache it
+measures trace + cache load, not a from-scratch compile."""
+from __future__ import annotations
+
+import json
+import platform
+import time
+from pathlib import Path
+
+from benchmarks.common import Row
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
+
+
+def _timed_entry(fn, n_runs: int) -> dict:
+    """fn must return a device array tied to the workload's output; we
+    block on it so async dispatch doesn't fake the wall time."""
+    import jax
+
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    cold = time.time() - t0
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    warm = time.time() - t0
+    return {"cold_s": round(cold, 4), "warm_s": round(warm, 4),
+            "runs": n_runs,
+            "runs_per_sec": round(n_runs / max(warm, 1e-9), 2)}
+
+
+def collect(quick: bool = True) -> dict:
+    import jax
+
+    from repro.core.hierarchy import FleetConfig, simulate_fleet
+    from repro.core.adaptive import RLSConfig
+    from repro.core.plant import PROFILES
+    from repro.core.sim import sweep
+
+    entries = {}
+    eps = (0.0, 0.05, 0.1, 0.15, 0.3)
+    reps = 3 if quick else 30
+    entries["fig7_sweep"] = _timed_entry(
+        lambda: sweep(("gros", "dahu"), eps, range(reps),
+                      total_work=6000.0, max_time=2000.0,
+                      collect_traces=False).exec_time,
+        2 * len(eps) * reps)
+
+    cfgs = [RLSConfig(lam=l) for l in (0.97, 0.99, 0.995, 0.999)]
+    seeds = 25 if quick else 250
+    entries["adaptive_grid"] = _timed_entry(
+        lambda: sweep("gros", (0.05, 0.1, 0.2), range(seeds),
+                      total_work=1200.0, max_time=1024.0, adaptive=cfgs,
+                      collect_traces=False).exec_time,
+        3 * len(cfgs) * seeds)
+
+    for n in (64, 1024):
+        prof = PROFILES["dahu"]
+        peak = float(prof.power_of_pcap(prof.pcap_max)) * n
+        fc = FleetConfig(n_nodes=n, epsilon=0.1, power_budget=0.7 * peak)
+        entries[f"fleet_{n}"] = _timed_entry(
+            lambda: simulate_fleet(prof, fc, steps=60, seed=0)["power"],
+            n)
+
+    return {
+        "schema": 1,
+        "quick": quick,
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "entries": entries,
+    }
+
+
+def run(quick: bool = True):
+    data = collect(quick)
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    rows: list[Row] = []
+    for name, e in data["entries"].items():
+        rows.append((f"telemetry/{name}", e["warm_s"] * 1e6,
+                     f"cold={e['cold_s']}s;warm={e['warm_s']}s;"
+                     f"runs_per_sec={e['runs_per_sec']}"))
+    rows.append(("telemetry/written", 0.0, str(BENCH_PATH)))
+    return rows

@@ -11,19 +11,123 @@ first-order model in the *linearized* coordinates:
 which gives online estimates tau_hat = dt*theta2/(1-theta2) and
 K_L_hat = theta1*(dt+tau_hat)/dt; the PI gains are re-placed each period
 (gain scheduling) with clamping and a dwell time to avoid chattering.
+
+Two implementations of the same estimator:
+
+* `RLSState`/`rls_init`/`rls_step` — pure-JAX, threaded through the scan
+  engine's carry so adaptive runs live inside the jitted closed loop
+  (`repro.core.sim`, `adaptive=` argument) and hyperparameter grids
+  vmap alongside profiles x epsilons x seeds.
+* `RLSAdapter` — the original numpy per-step version, kept ONLY as the
+  equivalence oracle (tests drive both with identical input sequences).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.controller import PIGains
 from repro.core.plant import PlantProfile
 
+# Clip bounds for theta2 when converting to (tau_hat, K_L_hat); shared by
+# both implementations so they stay bit-for-bit comparable.
+_TH2_LO, _TH2_HI = 1e-3, 1.0 - 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class RLSConfig:
+    """Estimator hyperparameters — the sweep axis of the adaptive grid."""
+    lam: float = 0.995      # forgetting factor
+    dwell: int = 5          # min periods between gain re-placements
+    kl_clamp: float = 4.0   # K_L_hat within [K_L_ref/c, K_L_ref*c]
+
+
+# Canonical packing order for traced RLS parameters (mirrors the
+# profile/gain packing in repro.core.sim). `kl_ref` is the DESIGN model's
+# K_L (the adapter linearizes against the model the gains were placed on,
+# not the true plant); `tau_obj` is the closed-loop time constant implied
+# by the original design, tau_obj = 1 / (kl_ref * k_i0).
+RLS_FIELDS = ("lam", "dwell", "kl_clamp", "kl_ref", "tau_obj")
+
+
+def rls_values(cfg: RLSConfig, design: PlantProfile, gains0: PIGains
+               ) -> jnp.ndarray:
+    tau_obj = 1.0 / (design.K_L * gains0.k_i)
+    return jnp.asarray([cfg.lam, float(cfg.dwell), cfg.kl_clamp,
+                        design.K_L, tau_obj], jnp.float32)
+
+
+class RLSState(NamedTuple):
+    """Estimator + scheduled-gain state carried through the scan."""
+    theta: jnp.ndarray         # (2,) [theta1, theta2]
+    P: jnp.ndarray             # (2, 2) inverse-covariance
+    prev_phi: jnp.ndarray      # (2,) regressor [pcap_L, progress_L] at i-1
+    has_prev: jnp.ndarray      # bool: a regressor has been recorded
+    since_update: jnp.ndarray  # periods since the last gain re-placement
+    k_p: jnp.ndarray           # scheduled proportional gain
+    k_i: jnp.ndarray           # scheduled integral gain
+    tau_hat: jnp.ndarray       # current time-constant estimate [s]
+    kl_hat: jnp.ndarray        # current static-gain estimate [Hz]
+
+
+def rls_init(rls_vals, gains_vals_kp, gains_vals_ki) -> RLSState:
+    """Fresh estimator around the design model packed in `rls_vals`."""
+    kl_ref = rls_vals[3]
+    tau0 = rls_vals[4] * kl_ref * gains_vals_kp  # tau = k_p * kl * tau_obj
+    return RLSState(theta=jnp.stack([kl_ref * 0.5, jnp.float32(0.5)]),
+                    P=jnp.eye(2, dtype=jnp.float32) * 1e2,
+                    prev_phi=jnp.zeros((2,), jnp.float32),
+                    has_prev=jnp.array(False),
+                    since_update=jnp.float32(0.0),
+                    k_p=jnp.float32(gains_vals_kp),
+                    k_i=jnp.float32(gains_vals_ki),
+                    tau_hat=jnp.asarray(tau0, jnp.float32),
+                    kl_hat=jnp.asarray(kl_ref, jnp.float32))
+
+
+def rls_step(rls_vals, s: RLSState, progress, pcap_l, dt) -> RLSState:
+    """One RLS update + dwell-gated gain re-placement (pure, scan-safe).
+
+    Mirrors `RLSAdapter.update` exactly: the regressor lags one period,
+    theta is stored unclipped, theta2 is clipped only for the
+    (tau_hat, K_L_hat) conversion, and gains move every `dwell`-th call.
+    """
+    lam, dwell, kl_clamp, kl_ref, tau_obj = (rls_vals[i] for i in range(5))
+    y = progress - kl_ref  # progress_L against the design model
+    phi = s.prev_phi
+    err = y - phi @ s.theta
+    denom = lam + phi @ s.P @ phi
+    k = (s.P @ phi) / denom
+    theta = jnp.where(s.has_prev, s.theta + k * err, s.theta)
+    P = jnp.where(s.has_prev, (s.P - jnp.outer(k, phi @ s.P)) / lam, s.P)
+
+    th2 = jnp.clip(theta[1], _TH2_LO, _TH2_HI)
+    tau_hat = dt * th2 / (1.0 - th2)
+    kl_hat = jnp.clip(theta[0] * (dt + tau_hat) / dt,
+                      kl_ref / kl_clamp, kl_ref * kl_clamp)
+
+    since = s.since_update + 1.0
+    place = since >= dwell
+    k_p = jnp.where(place, tau_hat / (kl_hat * tau_obj), s.k_p)
+    k_i = jnp.where(place, 1.0 / (kl_hat * tau_obj), s.k_i)
+    since = jnp.where(place, 0.0, since)
+    return RLSState(theta=theta, P=P,
+                    prev_phi=jnp.stack([jnp.asarray(pcap_l, jnp.float32),
+                                        jnp.asarray(y, jnp.float32)]),
+                    has_prev=jnp.array(True),
+                    since_update=since,
+                    k_p=jnp.asarray(k_p, jnp.float32),
+                    k_i=jnp.asarray(k_i, jnp.float32),
+                    tau_hat=jnp.asarray(tau_hat, jnp.float32),
+                    kl_hat=jnp.asarray(kl_hat, jnp.float32))
+
 
 @dataclasses.dataclass
 class RLSAdapter:
+    """Numpy reference estimator (equivalence oracle for `rls_step`)."""
     gains0: PIGains
     profile: PlantProfile
     lam: float = 0.995          # forgetting factor
@@ -51,7 +155,7 @@ class RLSAdapter:
         self._prev = (pcap_l, y)
 
         th1, th2 = self.theta
-        th2 = float(np.clip(th2, 1e-3, 1 - 1e-3))
+        th2 = float(np.clip(th2, _TH2_LO, _TH2_HI))
         tau_hat = dt * th2 / (1.0 - th2)
         kl_hat = th1 * (dt + tau_hat) / dt
         lo, hi = (self.profile.K_L / self.kl_clamp,

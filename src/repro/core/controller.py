@@ -53,6 +53,12 @@ class PIGains:
                    a=profile.a, b=profile.b, alpha=profile.alpha,
                    beta=profile.beta)
 
+    def with_gains(self, k_p, k_i) -> "PIGains":
+        """Scheduled-gain variant: same setpoint/range/transform, new
+        (K_P, K_I). jit-safe with traced values — the scan engine's RLS
+        gain scheduling re-places poles through this each period."""
+        return dataclasses.replace(self, k_p=k_p, k_i=k_i)
+
     # ---- Eq. 2 and inverse ------------------------------------------------
     def linearize(self, pcap):
         return -jnp.exp(-self.alpha * (self.a * pcap + self.b - self.beta))

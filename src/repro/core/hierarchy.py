@@ -2,28 +2,38 @@
 
 Two levels:
 
-* **node level** — the paper's PI loop, vectorized with vmap: one
-  (plant, controller) pair per node, all advanced in a single jitted scan.
+* **node level** — the paper's full control period, one per node: the
+  scan engine's fused plant/heartbeat/PI step (`repro.core.sim.
+  engine_step`) vmapped across the fleet. Fleet runs therefore share the
+  single-node engine's compiled dynamics (and its persistent XLA cache)
+  instead of maintaining a duplicate hand-rolled step.
 * **cluster level** — a slow outer loop that splits a global power budget
   across nodes every `reallocate_every` periods. Water-filling on the
-  *marginal progress per watt* of the identified static model: nodes whose
-  knee sits higher (less saturated) receive more cap. Straggler mitigation
-  falls out naturally: a node whose measured progress lags the fleet median
-  gets a deeper setpoint boost (the inverse of the paper's energy-saving
-  direction).
+  previous period's measured progress: nodes lagging the fleet median
+  get more budget (straggler mitigation falls out naturally). The
+  allocation enters each node's period as `cap_limit` — the applied
+  command is min(PI command, allocation).
 
 The per-node PI remains exactly Eq. 4 — the cluster level only moves each
-node's setpoint/cap budget, so the paper's stability analysis still applies
-within a reallocation window.
+node's cap budget, so the paper's stability analysis still applies within
+a reallocation window.
+
+The whole two-level run is one jitted scan, cached by (n_nodes, horizon
+bucket, budgeted) only — plant, gain, budget and reallocation cadence are
+traced — so e.g. the 1024-node benchmark compiles once per machine.
+`_simulate_fleet_reference` keeps the pre-refactor hand-rolled step as
+the equivalence oracle for tests.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import sim
 from repro.core.controller import PIGains, PIState, pi_init, pi_step
 from repro.core.plant import PlantProfile, PlantState, plant_init, plant_step
 
@@ -36,22 +46,29 @@ class FleetConfig:
     dt: float = 1.0
     power_budget: float = 0.0   # total W across nodes; 0 = uncapped
     reallocate_every: int = 10
-    straggler_boost: float = 0.05  # extra setpoint fraction for stragglers
+    # water-filling weight gain on relative lag: weights = 1 + boost*lag;
+    # 1.0 reproduces the original (unparameterized) behaviour
+    straggler_boost: float = 1.0
 
 
 def _water_fill(profile: PlantProfile, budget: float, n: int,
                 weights: jnp.ndarray) -> jnp.ndarray:
     """Split `budget` watts over n nodes proportionally to weights, clipped
-    to the actuator range (iterative redistribution, 8 rounds)."""
+    to the actuator range.
+
+    Starts from the clipped proportional target, then iteratively refines
+    the CARRIED allocation: each round measures the remaining deficit (or
+    surplus) and redistributes it over the nodes with room in that
+    direction, so the total converges to the budget whenever it is
+    feasible (n*pcap_min <= budget <= n*pcap_max) and saturates at the
+    nearest bound otherwise."""
     lo, hi = profile.pcap_min, profile.pcap_max
-    alloc = jnp.full((n,), budget / n)
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+    alloc = jnp.clip(budget * w, lo, hi)
 
     def body(alloc, _):
-        w = weights / jnp.maximum(weights.sum(), 1e-9)
-        alloc = jnp.clip(budget * w, lo, hi)
-        # redistribute leftover to unsaturated nodes
         leftover = budget - alloc.sum()
-        room = hi - alloc
+        room = jnp.where(leftover >= 0, hi - alloc, alloc - lo)
         share = room / jnp.maximum(room.sum(), 1e-9)
         alloc = jnp.clip(alloc + leftover * share, lo, hi)
         return alloc, None
@@ -60,15 +77,92 @@ def _water_fill(profile: PlantProfile, budget: float, n: int,
     return alloc
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_fleet(n: int, scan_len: int, budgeted: bool):
+    """Two-level fleet run, compiled once per (fleet size, horizon bucket,
+    budgeted) — every scalar parameter is traced."""
+
+    def run(profile_vals, gains_vals, budget, realloc_every, boost,
+            steps, dt, key):
+        profile = sim._unpack_profile(profile_vals)
+        gains = sim._unpack_gains(gains_vals)
+        max_time = steps * dt  # freeze (engine early-exit) past the horizon
+        total_work = jnp.float32(jnp.inf)
+
+        nodes0 = jax.vmap(
+            lambda _: sim._default_init(profile, gains))(jnp.arange(n))
+        if budgeted:
+            v_step = jax.vmap(
+                lambda c, k, lim: sim.engine_step(
+                    profile, gains, c, total_work, max_time, dt, k,
+                    cap_limit=lim), in_axes=(0, 0, 0))
+        else:
+            v_step = jax.vmap(
+                lambda c, k: sim.engine_step(
+                    profile, gains, c, total_work, max_time, dt, k),
+                in_axes=(0, 0))
+
+        def step(carry, xs):
+            nodes, alloc, prev_prog = carry
+            t, k = xs
+
+            if budgeted:
+                # cluster level: periodic water-filling on the previous
+                # period's progress; stragglers (below fleet median) weigh
+                # more and receive a larger share of the budget
+                def reallocate(_):
+                    med = jnp.median(prev_prog)
+                    lag = jnp.maximum(
+                        0.0, (med - prev_prog) / jnp.maximum(med, 1e-9))
+                    return _water_fill(profile, budget, n,
+                                       1.0 + boost * lag)
+
+                alloc = jax.lax.cond(t % realloc_every == 0, reallocate,
+                                     lambda _: alloc, None)
+                nodes, out = v_step(nodes, jax.random.split(k, n), alloc)
+            else:
+                nodes, out = v_step(nodes, jax.random.split(k, n))
+
+            row = {"progress_mean": out["progress"].mean(),
+                   "progress_med": jnp.median(out["progress"]),
+                   "power": out["power"].sum(),
+                   "pcap_mean": out["pcap"].mean()}
+            return (nodes, alloc, out["progress"]), row
+
+        keys = jax.random.split(key, scan_len)
+        (nodes, _, _), traces = jax.lax.scan(
+            step, (nodes0, jnp.full((n,), profile.pcap_max),
+                   jnp.zeros((n,))),
+            (jnp.arange(scan_len), keys))
+        traces["energy_total"] = nodes.plant.energy.sum()
+        traces["work_total"] = nodes.plant.work.sum()
+        return traces
+
+    return jax.jit(run)
+
+
 def simulate_fleet(profile: PlantProfile, fc: FleetConfig, steps: int,
                    seed: int = 0) -> dict:
     """Run the two-level controller over a homogeneous fleet. Returns traces
     aggregated per step: fleet progress mean/median, energy, caps."""
     gains = PIGains.from_model(profile, fc.epsilon, fc.tau_obj)
-    n = fc.n_nodes
+    scan_len = sim._bucket_steps(steps)
+    traces = _jit_fleet(fc.n_nodes, scan_len, fc.power_budget > 0)(
+        sim.profile_values(profile), sim.gains_values(gains),
+        jnp.float32(fc.power_budget), jnp.int32(fc.reallocate_every),
+        jnp.float32(fc.straggler_boost), jnp.float32(steps),
+        jnp.float32(fc.dt), jax.random.PRNGKey(seed))
+    return {k: (v[:steps] if getattr(v, "ndim", 0) else v)
+            for k, v in traces.items()}
 
-    def node_init(i):
-        return plant_init(profile), pi_init(gains)
+
+def _simulate_fleet_reference(profile: PlantProfile, fc: FleetConfig,
+                              steps: int, seed: int = 0) -> dict:
+    """Pre-refactor hand-rolled fleet step (per-node plant_step + pi_step,
+    raw measured progress, no heartbeat aggregation). Kept ONLY as the
+    statistical-equivalence oracle for the engine-backed simulate_fleet."""
+    gains = PIGains.from_model(profile, fc.epsilon, fc.tau_obj)
+    n = fc.n_nodes
 
     plant_states = jax.vmap(lambda i: plant_init(profile))(jnp.arange(n))
     pi_states = jax.vmap(lambda i: pi_init(gains))(jnp.arange(n))
@@ -83,12 +177,11 @@ def simulate_fleet(profile: PlantProfile, fc: FleetConfig, steps: int,
         plant_s, meas = v_plant(profile, plant_s, caps, fc.dt, keys)
         progress = meas["progress"]
 
-        # cluster level: periodic reallocation + straggler boost
         def reallocate(args):
             pi_s, caps = args
             med = jnp.median(progress)
             lag = jnp.maximum(0.0, (med - progress) / jnp.maximum(med, 1e-9))
-            weights = 1.0 + lag  # stragglers get more budget
+            weights = 1.0 + fc.straggler_boost * lag  # stragglers weigh more
             if fc.power_budget > 0:
                 caps = _water_fill(profile, fc.power_budget, n, weights)
             return pi_s, caps
@@ -97,7 +190,6 @@ def simulate_fleet(profile: PlantProfile, fc: FleetConfig, steps: int,
             (fc.power_budget > 0) & (t % fc.reallocate_every == 0),
             reallocate, lambda a: a, (pi_s, caps))
 
-        # node level: PI tracking toward the (boosted) setpoint
         pi_s, pi_caps = v_pi(gains, pi_s, progress, fc.dt)
         caps = jnp.where(fc.power_budget > 0,
                          jnp.minimum(pi_caps, caps), pi_caps)

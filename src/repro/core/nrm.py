@@ -92,9 +92,13 @@ class NRM:
         self.records: List[ControlRecord] = []
         self._t = 0.0
         self._adaptive = None
+        self._rls_state = None  # engine-side estimator state (run_simulated)
         if pc_cfg.adaptive:
-            from repro.core.adaptive import RLSAdapter
+            from repro.core.adaptive import RLSAdapter, RLSConfig
             self._adaptive = RLSAdapter(self.gains, self.profile)
+            self._rls_cfg = RLSConfig(lam=self._adaptive.lam,
+                                      dwell=self._adaptive.dwell,
+                                      kl_clamp=self._adaptive.kl_clamp)
 
     # ---- workload-facing API ---------------------------------------------
     def heartbeat(self, work: float = 1.0, t: Optional[float] = None) -> None:
@@ -145,40 +149,71 @@ class NRM:
         """Closed loop against the simulated plant until work completes.
 
         Delegates to the jitted `repro.core.sim` scan engine (one compiled
-        step fusing plant, heartbeat window and PI command); the Python
-        loop below remains only for the adaptive (RLS) path, whose numpy
-        estimator state cannot live inside a scan. NRM/actuator state
-        (controller, plant, last measurement, RNG) is threaded through,
-        so repeated calls continue where the last run stopped."""
+        step fusing plant, heartbeat window, optional RLS gain scheduling
+        and PI command). NRM/actuator state (controller, estimator, plant,
+        last measurement, RNG) is threaded through, so repeated calls
+        continue where the last run stopped. The per-step Python loop
+        (`_run_simulated_python`) remains only as the equivalence oracle."""
         assert isinstance(self.actuator, SimulatedPowerActuator)
-        if self._adaptive is None:
-            from repro.core import sim
-            init = sim.resume_init(self.actuator.state,
-                                   self.controller.state,
-                                   self.actuator._pcap)
-            res = sim.simulate_closed_loop(
-                self.actuator.profile, gains=self.gains,
-                total_work=total_work, max_time=max_time,
-                dt=self.cfg.sampling_period, seed=seed, init=init)
-            self._t = res.exec_time
-            self.controller.state = PIState(
-                prev_error=jnp.float32(res.pi_state.prev_error),
-                prev_pcap_l=jnp.float32(res.pi_state.prev_pcap_l))
-            self.actuator.state = jax.tree_util.tree_map(
-                jnp.asarray, res.plant_state)
-            self.actuator._pcap = res.pcap
-            if res.n_steps:
-                self.actuator._last_meas = {
-                    "power": float(res.traces["power"][-1]),
-                    "progress": float(res.traces["progress"][-1]),
-                    "pcap": res.pcap,
-                }
-            # advance the actuator's RNG past this run so a later
-            # advance()-based step doesn't replay the engine's noise
-            self.actuator._key = jax.random.fold_in(
-                jax.random.fold_in(self.actuator._key, seed), res.n_steps)
-            return res.traces
-        return self._run_simulated_python(total_work, max_time, seed)
+        from repro.core import sim
+        from repro.core.adaptive import rls_init, rls_values
+        kwargs = {}
+        rls = None
+        if self._adaptive is not None:
+            kwargs = {"adaptive": self._rls_cfg, "design": self.profile}
+            rls = self._rls_state
+            if rls is None:  # fresh estimator around the design model
+                rls = rls_init(
+                    rls_values(self._rls_cfg, self.profile, self.gains),
+                    self.gains.k_p, self.gains.k_i)
+        init = sim.resume_init(self.actuator.state,
+                               self.controller.state,
+                               self.actuator._pcap, rls=rls)
+        # derive the engine's key from the actuator RNG (advanced after
+        # every run) so a resumed segment at the same seed does not
+        # replay the previous segment's noise stream
+        key = jax.random.fold_in(self.actuator._key, seed)
+        res = sim.simulate_closed_loop(
+            self.actuator.profile, gains=self.gains,
+            total_work=total_work, max_time=max_time,
+            dt=self.cfg.sampling_period, key=key, init=init, **kwargs)
+        self._t = res.exec_time
+        self.controller.state = PIState(
+            prev_error=jnp.float32(res.pi_state.prev_error),
+            prev_pcap_l=jnp.float32(res.pi_state.prev_pcap_l))
+        self.actuator.state = jax.tree_util.tree_map(
+            jnp.asarray, res.plant_state)
+        self.actuator._pcap = res.pcap
+        if res.n_steps:
+            self.actuator._last_meas = {
+                "power": float(res.traces["power"][-1]),
+                "progress": float(res.traces["progress"][-1]),
+                "pcap": res.pcap,
+            }
+        if res.rls_state is not None:
+            self._rls_state = res.rls_state
+            self._sync_adapter_from_engine(res.rls_state)
+        # advance the actuator's RNG past this run so a later
+        # advance()-based step doesn't replay the engine's noise
+        self.actuator._key = jax.random.fold_in(
+            jax.random.fold_in(self.actuator._key, seed), res.n_steps)
+        return res.traces
+
+    def _sync_adapter_from_engine(self, rls) -> None:
+        """Mirror the engine's final estimator into the numpy RLSAdapter
+        and the stateful controller, so a subsequent `control_step`
+        (runtime path) continues from the adapted gains/model."""
+        import dataclasses as _dc
+        a = self._adaptive
+        a.theta = np.asarray(rls.theta, np.float64)
+        a.P = np.asarray(rls.P, np.float64)
+        a.tau_hat = float(rls.tau_hat)
+        a.kl_hat = float(rls.kl_hat)
+        a._prev = (float(rls.prev_phi[0]), float(rls.prev_phi[1])) \
+            if bool(rls.has_prev) else None
+        a._since_update = int(rls.since_update)
+        self.controller.gains = _dc.replace(
+            self.controller.gains, k_p=float(rls.k_p), k_i=float(rls.k_i))
 
     def _run_simulated_python(self, total_work: float,
                               max_time: float = 3600.0,

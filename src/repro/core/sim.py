@@ -4,24 +4,40 @@ The paper's evaluation is thousands of closed-loop runs sweeping the
 degradation grid eps across clusters and seeds. `NRM.run_simulated` used
 to drive ONE run as a Python while-loop with per-step jit dispatch; this
 module fuses the whole loop — plant dynamics (Eq. 3 + noise), heartbeat
-aggregation over the control window (Eq. 1 median) and the PI command
-(Eq. 4) — into a single `lax.scan` step. Plant and gain parameters enter
-the compiled function as traced arrays, so ONE compilation (keyed only by
-the scan length) serves every profile, epsilon and seed.
+aggregation over the control window (Eq. 1 median), optional RLS gain
+scheduling (§5.2 extension, `repro.core.adaptive`) and the PI command
+(Eq. 4) — into a single `lax.scan` step. Plant, gain and RLS parameters
+enter the compiled function as traced arrays, so ONE compilation (keyed
+only by the scan length and the trace/summary mode) serves every
+profile, epsilon, seed and estimator hyperparameter.
 
 Entry points:
 
 * `simulate_closed_loop(profile, ...)` — one run; trimmed numpy traces
-  compatible with the old `NRM.run_simulated` return value.
+  compatible with the old `NRM.run_simulated` return value. Pass
+  `adaptive=RLSConfig(...)` to run RLS gain scheduling inside the scan.
 * `sweep(profiles, epsilons, seeds, ...)` — vmapped profiles x epsilons
-  x seeds grid in one compiled call; the substrate for Fig. 6/7 and
-  paper-scale (30-rep, full eps-grid) sweeps in CI-feasible time.
+  [x rls-configs] x seeds grid in one compiled call; the substrate for
+  Fig. 6/7, paper-scale (30-rep, full eps-grid) sweeps and adaptive
+  hyperparameter grids in CI-feasible time.
+* `engine_step(...)` — the fused single-period step, reused by
+  `repro.core.hierarchy` (vmapped over fleet nodes) so fleet runs share
+  this engine's compiled dynamics instead of duplicating them.
 * `replay_model(profile, pcaps, dt)` — deterministic Eq. 3 replay (the
   Fig. 5 model-accuracy baseline).
 
 Runs finish by early-exit-by-mask: once accumulated work reaches
 `total_work` the carried state freezes and the remaining scan steps are
 no-ops; the `valid` trace marks live steps.
+
+Trace-free summary mode: with `collect_traces=False` the scan emits no
+per-step outputs; instead the carry reduces them online (live-step
+count, progress/power first and second moments, progress and cap
+histograms). Memory drops from O(P*E*S*T) to O(P*E*S), which is what
+makes 100k-run sweeps feasible; `hist_quantile` turns the carried
+histograms into median/p95-style statistics. Every run also carries
+these summaries in full-trace mode, so the two modes are directly
+comparable (tests assert consistency).
 
 Heartbeats: the sim path synthesizes n ~ Poisson(rate * dt) evenly
 spaced beats per control period (exactly what `NRM.run_simulated` fed
@@ -41,6 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.adaptive import RLSConfig, RLSState, rls_init, rls_step, \
+    rls_values
 from repro.core.controller import PIGains, PIState, pi_init, pi_step
 from repro.core.plant import (PROFILES, PlantProfile, PlantState,
                               pcap_linearize, plant_init, plant_step,
@@ -76,6 +94,13 @@ _PROFILE_FIELDS = ("a", "b", "alpha", "beta", "K_L", "tau", "pcap_min",
                    "drop_prob", "drop_exit_prob", "drop_level")
 _GAIN_FIELDS = ("k_p", "k_i", "setpoint", "pcap_min", "pcap_max",
                 "a", "b", "alpha", "beta")
+
+# Online-summary histogram resolution. Progress bins span
+# [0, PROG_HIST_SPAN * K_L] (noise can push progress above K_L); cap bins
+# span the actuator range [pcap_min, pcap_max].
+PROG_BINS = 64
+CAP_BINS = 32
+PROG_HIST_SPAN = 1.5
 
 
 def profile_values(profile: PlantProfile) -> jnp.ndarray:
@@ -121,6 +146,35 @@ def _window_median(n, anchor_gap, has_anchor, dt):
     return jnp.where(has_anchor, with_anchor, no_anchor)
 
 
+class _Summary(NamedTuple):
+    """Online per-run reductions carried through the scan (the trace-free
+    summary mode's entire output; also carried in full-trace mode so the
+    two modes stay comparable). `count` is the number of accumulated
+    steps — live steps past the summary warmup — and the normalizer for
+    the moments."""
+    count: jnp.ndarray
+    progress_sum: jnp.ndarray
+    progress_sq_sum: jnp.ndarray
+    power_sum: jnp.ndarray
+    progress_hist: jnp.ndarray  # (PROG_BINS,)
+    pcap_hist: jnp.ndarray      # (CAP_BINS,)
+
+
+def _summary_init() -> _Summary:
+    return _Summary(count=jnp.float32(0.0),
+                    progress_sum=jnp.float32(0.0),
+                    progress_sq_sum=jnp.float32(0.0),
+                    power_sum=jnp.float32(0.0),
+                    progress_hist=jnp.zeros((PROG_BINS,), jnp.float32),
+                    pcap_hist=jnp.zeros((CAP_BINS,), jnp.float32))
+
+
+def _hist_add(hist, x, lo, hi, nbins, live):
+    idx = jnp.clip(((x - lo) / (hi - lo) * nbins).astype(jnp.int32),
+                   0, nbins - 1)
+    return hist.at[idx].add(live)
+
+
 class _Carry(NamedTuple):
     plant: PlantState
     pi: PIState
@@ -128,73 +182,142 @@ class _Carry(NamedTuple):
     anchor_gap: jnp.ndarray  # time from last beat to window start [s]
     has_anchor: jnp.ndarray  # bool: any beat ever fired
     t: jnp.ndarray           # simulated time [s]
+    steps: jnp.ndarray       # live (pre-completion) step count
     done: jnp.ndarray        # bool: total_work reached
+    summ: _Summary
+    rls: Optional[RLSState]  # None unless adaptive gain scheduling is on
 
 
-def _default_init(profile: PlantProfile, gains: PIGains) -> _Carry:
+def _default_init(profile: PlantProfile, gains: PIGains,
+                  rls_vals=None) -> _Carry:
+    rls = None if rls_vals is None else rls_init(rls_vals, gains.k_p,
+                                                 gains.k_i)
     return _Carry(plant=plant_init(profile),
                   pi=pi_init(gains),
                   pcap=jnp.float32(profile.pcap_max),
                   anchor_gap=jnp.float32(0.0),
                   has_anchor=jnp.array(False),
                   t=jnp.float32(0.0),
-                  done=jnp.array(False))
+                  steps=jnp.int32(0),
+                  done=jnp.array(False),
+                  summ=_summary_init(),
+                  rls=rls)
 
 
-def resume_init(plant: PlantState, pi: PIState, pcap) -> _Carry:
-    """Carry that resumes a run from existing plant/controller state (the
-    NRM delegation path); the heartbeat window starts fresh."""
+def resume_init(plant: PlantState, pi: PIState, pcap,
+                rls: Optional[RLSState] = None) -> _Carry:
+    """Carry that resumes a run from existing plant/controller (and
+    optionally RLS estimator) state — the NRM delegation path; the
+    heartbeat window and the per-run summaries start fresh."""
     return _Carry(plant=plant, pi=pi, pcap=jnp.float32(pcap),
                   anchor_gap=jnp.float32(0.0),
                   has_anchor=jnp.array(False),
                   t=jnp.float32(0.0),
-                  done=jnp.array(False))
+                  steps=jnp.int32(0),
+                  done=jnp.array(False),
+                  summ=_summary_init(),
+                  rls=rls)
 
 
-def _scan_core(max_steps: int):
-    """Pure closed-loop run: (profile_vals, gains_vals, init|None,
-    total_work, max_time, dt, key) -> (traces, final_carry)."""
+def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
+                total_work, max_time, dt, key, *, rls_vals=None,
+                cap_limit=None, summary_from=0.0):
+    """One fused control period: plant (Eq. 3) -> heartbeat median
+    (Eq. 1) -> optional RLS gain re-placement -> PI command (Eq. 4),
+    with early-exit-by-mask freezing and online summary reduction.
 
-    def run(profile_vals, gains_vals, init: Optional[_Carry], total_work,
-            max_time, dt, key):
+    Pure and vmap/scan-safe; `repro.core.hierarchy` vmaps it over fleet
+    nodes with `cap_limit` carrying the cluster-level budget allocation
+    (the applied command is min(PI command, allocation)). `summary_from`
+    (traced) excludes the first steps — the descent transient — from the
+    online summary reductions (never from time/energy/work).
+
+    Returns (new_carry, out) where out holds this period's trace row.
+    """
+    kplant, khb = jax.random.split(key)
+    plant_s, meas = plant_step(profile, c.plant, c.pcap, dt, kplant)
+    t = c.t + dt
+    # synthesize heartbeats at the measured rate (Eq. 1 input)
+    n = jax.random.poisson(khb, jnp.maximum(meas["progress"], 0.0) * dt)
+    progress = _window_median(n, c.anchor_gap, c.has_anchor, dt)
+    anchor_gap = jnp.where(n > 0,
+                           0.5 * dt / jnp.maximum(
+                               n.astype(jnp.float32), 1.0),
+                           c.anchor_gap + dt)
+    has_anchor = c.has_anchor | (n > 0)
+
+    g, rls = gains, c.rls
+    if rls is not None:
+        # same call order as the NRM loop: the estimator sees the PREVIOUS
+        # linearized command (pi.prev_pcap_l) alongside this period's
+        # aggregated progress, then this period's PI runs on the
+        # (possibly re-placed) gains
+        rls = rls_step(rls_vals, rls, progress, c.pi.prev_pcap_l, dt)
+        g = gains.with_gains(rls.k_p, rls.k_i)
+    pi_s, pcap = pi_step(g, c.pi, progress, dt)
+    if cap_limit is not None:
+        pcap = jnp.minimum(pcap, cap_limit)
+
+    # early-exit-by-mask: freeze everything once done
+    frz = lambda new, old: jax.tree_util.tree_map(
+        lambda a, b: jnp.where(c.done, b, a), new, old)
+    plant_s = frz(plant_s, c.plant)
+    pi_s = frz(pi_s, c.pi)
+    if rls is not None:
+        rls = frz(rls, c.rls)
+    pcap = jnp.where(c.done, c.pcap, pcap)
+    anchor_gap = jnp.where(c.done, c.anchor_gap, anchor_gap)
+    has_anchor = jnp.where(c.done, c.has_anchor, has_anchor)
+    t = jnp.where(c.done, c.t, t)
+    progress = jnp.where(c.done, 0.0, progress)
+    power = jnp.where(c.done, 0.0, meas["power"])
+
+    acc = ((~c.done) & (c.steps.astype(jnp.float32) >= summary_from)
+           ).astype(jnp.float32)
+    summ = _Summary(
+        count=c.summ.count + acc,
+        progress_sum=c.summ.progress_sum + acc * progress,
+        progress_sq_sum=c.summ.progress_sq_sum
+        + acc * progress * progress,
+        power_sum=c.summ.power_sum + acc * power,
+        progress_hist=_hist_add(c.summ.progress_hist, progress,
+                                0.0, PROG_HIST_SPAN * profile.K_L,
+                                PROG_BINS, acc),
+        pcap_hist=_hist_add(c.summ.pcap_hist, pcap, profile.pcap_min,
+                            profile.pcap_max, CAP_BINS, acc))
+
+    done = (c.done | (plant_s.work >= total_work)
+            | (t >= max_time - 1e-6))
+    out = {"t": t, "progress": progress, "pcap": pcap,
+           "power": power, "energy": plant_s.energy,
+           "work": plant_s.work, "valid": ~c.done}
+    if rls is not None:
+        out.update({"k_p": rls.k_p, "k_i": rls.k_i,
+                    "tau_hat": rls.tau_hat, "kl_hat": rls.kl_hat,
+                    "theta1": rls.theta[0], "theta2": rls.theta[1]})
+    return _Carry(plant_s, pi_s, pcap, anchor_gap, has_anchor, t,
+                  c.steps + (~c.done).astype(jnp.int32), done, summ,
+                  rls), out
+
+
+def _scan_core(max_steps: int, collect: bool = True):
+    """Pure closed-loop run: (profile_vals, gains_vals, rls_vals|None,
+    init|None, total_work, max_time, dt, key) -> (traces|None,
+    final_carry). Adaptivity is keyed by the pytree structure of
+    rls_vals/init (None = fixed gains), so no extra static flag."""
+
+    def run(profile_vals, gains_vals, rls_vals, init: Optional[_Carry],
+            total_work, max_time, dt, summary_from, key):
         profile = _unpack_profile(profile_vals)
         gains = _unpack_gains(gains_vals)
-        carry0 = _default_init(profile, gains) if init is None else init
+        carry0 = (_default_init(profile, gains, rls_vals)
+                  if init is None else init)
 
         def body(c: _Carry, k):
-            kplant, khb = jax.random.split(k)
-            plant_s, meas = plant_step(profile, c.plant, c.pcap, dt, kplant)
-            t = c.t + dt
-            # synthesize heartbeats at the measured rate (Eq. 1 input)
-            n = jax.random.poisson(khb, jnp.maximum(meas["progress"], 0.0)
-                                   * dt)
-            progress = _window_median(n, c.anchor_gap, c.has_anchor, dt)
-            anchor_gap = jnp.where(n > 0,
-                                   0.5 * dt / jnp.maximum(
-                                       n.astype(jnp.float32), 1.0),
-                                   c.anchor_gap + dt)
-            has_anchor = c.has_anchor | (n > 0)
-            pi_s, pcap = pi_step(gains, c.pi, progress, dt)
-
-            # early-exit-by-mask: freeze everything once done
-            frz = lambda new, old: jax.tree_util.tree_map(
-                lambda a, b: jnp.where(c.done, b, a), new, old)
-            plant_s = frz(plant_s, c.plant)
-            pi_s = frz(pi_s, c.pi)
-            pcap = jnp.where(c.done, c.pcap, pcap)
-            anchor_gap = jnp.where(c.done, c.anchor_gap, anchor_gap)
-            has_anchor = jnp.where(c.done, c.has_anchor, has_anchor)
-            t = jnp.where(c.done, c.t, t)
-            progress = jnp.where(c.done, 0.0, progress)
-            power = jnp.where(c.done, 0.0, meas["power"])
-
-            done = (c.done | (plant_s.work >= total_work)
-                    | (t >= max_time - 1e-6))
-            out = {"t": t, "progress": progress, "pcap": pcap,
-                   "power": power, "energy": plant_s.energy,
-                   "work": plant_s.work, "valid": ~c.done}
-            return _Carry(plant_s, pi_s, pcap, anchor_gap, has_anchor,
-                          t, done), out
+            c2, out = engine_step(profile, gains, c, total_work,
+                                  max_time, dt, k, rls_vals=rls_vals,
+                                  summary_from=summary_from)
+            return c2, (out if collect else None)
 
         keys = jax.random.split(key, max_steps)
         final, traces = jax.lax.scan(body, carry0, keys)
@@ -203,20 +326,25 @@ def _scan_core(max_steps: int):
     return run
 
 
-# `init` is a pytree (or None); jit caches on its structure, so the None
-# (fresh run) and _Carry (resumed run) variants trace separately.
+# `init`/`rls_vals` are pytrees (or None); jit caches on their structure,
+# so fresh/resumed and fixed/adaptive variants trace separately.
 @functools.lru_cache(maxsize=None)
-def _jit_run(max_steps: int):
-    return jax.jit(_scan_core(max_steps))
+def _jit_run(max_steps: int, collect: bool = True):
+    return jax.jit(_scan_core(max_steps, collect))
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_sweep(max_steps: int):
-    run = _scan_core(max_steps)
-    f = lambda pv, gv, tw, mt, dt, key: run(pv, gv, None, tw, mt, dt, key)
-    f = jax.vmap(f, in_axes=(None, None, None, None, None, 0))  # seeds
-    f = jax.vmap(f, in_axes=(None, 0, None, None, None, None))  # epsilons
-    f = jax.vmap(f, in_axes=(0, 0, None, None, None, None))     # profiles
+def _jit_sweep(max_steps: int, adaptive: bool = False,
+               collect: bool = True):
+    run = _scan_core(max_steps, collect)
+    f = lambda pv, gv, rv, tw, mt, dt, sf, key: run(pv, gv, rv, None, tw,
+                                                    mt, dt, sf, key)
+    f = jax.vmap(f, in_axes=(None,) * 7 + (0,))                      # seeds
+    if adaptive:
+        f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 5)       # cfgs
+    f = jax.vmap(f, in_axes=(None, 0) + (None,) * 6)                 # eps
+    f = jax.vmap(f, in_axes=(0, 0, 0 if adaptive else None)
+                 + (None,) * 5)                                      # profs
     return jax.jit(f)
 
 
@@ -243,6 +371,46 @@ def open_loop_runs(profile: Union[str, PlantProfile], steps: int,
                                       keys)
 
 
+def _hist_edges(profile: PlantProfile) -> Dict[str, np.ndarray]:
+    return {
+        "progress_edges": np.linspace(0.0, PROG_HIST_SPAN * profile.K_L,
+                                      PROG_BINS + 1, dtype=np.float32),
+        "pcap_edges": np.linspace(profile.pcap_min, profile.pcap_max,
+                                  CAP_BINS + 1, dtype=np.float32),
+    }
+
+
+def hist_quantile(hist, edges, q: float = 0.5) -> np.ndarray:
+    """Quantile estimate from an online histogram (bin-center rule).
+
+    `hist` has shape (..., N); `edges` is (N+1,) or (P, N+1) with P
+    matching hist's leading axis (the sweep's profile axis). Accurate to
+    half a bin width — PROG_HIST_SPAN*K_L/PROG_BINS for progress."""
+    hist = np.asarray(hist, np.float64)
+    edges = np.asarray(edges, np.float64)
+    centers = 0.5 * (edges[..., :-1] + edges[..., 1:])
+    if centers.ndim == 2:  # per-profile edges -> broadcast over inner axes
+        centers = centers.reshape(
+            (centers.shape[0],) + (1,) * (hist.ndim - 2)
+            + (centers.shape[-1],))
+    c = hist.cumsum(-1)
+    idx = (c >= q * c[..., -1:]).argmax(-1)
+    return np.take_along_axis(np.broadcast_to(centers, hist.shape),
+                              idx[..., None], -1)[..., 0]
+
+
+def _summary_dict(final: _Carry, edges: Dict[str, np.ndarray]) -> Dict:
+    n = jnp.maximum(final.summ.count, 1.0)
+    mean = final.summ.progress_sum / n
+    var = jnp.maximum(final.summ.progress_sq_sum / n - mean * mean, 0.0)
+    return {"progress_mean": mean,
+            "progress_std": jnp.sqrt(var),
+            "power_mean": final.summ.power_sum / n,
+            "progress_hist": final.summ.progress_hist,
+            "pcap_hist": final.summ.pcap_hist,
+            **edges}
+
+
 @dataclasses.dataclass(frozen=True)
 class SimResult:
     """One closed-loop run, trimmed to the completed steps."""
@@ -255,25 +423,39 @@ class SimResult:
     pi_state: PIState
     plant_state: PlantState
     pcap: float
+    summary: Dict[str, np.ndarray] = dataclasses.field(
+        default_factory=dict)
+    rls_state: Optional[RLSState] = None  # final estimator (adaptive runs)
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Batched runs over profiles x epsilons x seeds.
+    """Batched runs over profiles x epsilons [x rls-configs] x seeds.
 
-    Trace arrays have shape (..., T) where ... is (P, E, S) — the P axis
-    is squeezed away when a single profile was passed. Frozen (post-
-    completion) steps carry `valid == False`.
-    """
-    traces: Dict[str, jnp.ndarray]
+    Trace arrays have shape (..., T) where ... is (P, E, S) — or
+    (P, E, A, S) for adaptive sweeps — with the P (and A) axes squeezed
+    away when a single profile (single RLSConfig) was passed. Frozen
+    (post-completion) steps carry `valid == False`. In summary mode
+    (`collect_traces=False`) `traces` is None and only `summary` (plus
+    the scalar reductions) is materialized: O(grid) memory, not
+    O(grid * T)."""
+    traces: Optional[Dict[str, jnp.ndarray]]
     exec_time: jnp.ndarray
     energy: jnp.ndarray
     work: jnp.ndarray
     completed: jnp.ndarray
     n_steps: jnp.ndarray
+    summary: Dict[str, jnp.ndarray] = dataclasses.field(
+        default_factory=dict)
 
     def masked_mean(self, key: str) -> np.ndarray:
-        """Per-run mean of a trace over its live steps."""
+        """Per-run mean of a trace over its live steps. For 'progress'
+        and 'power' in summary mode use summary['progress_mean'] /
+        summary['power_mean'] instead."""
+        if self.traces is None:
+            raise ValueError(
+                "no traces collected (summary mode); use "
+                "summary['progress_mean'] / summary['power_mean']")
         x = np.asarray(self.traces[key])
         m = np.asarray(self.traces["valid"])
         return (x * m).sum(-1) / np.maximum(m.sum(-1), 1)
@@ -288,27 +470,49 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                          seed: int = 0,
                          key: Optional[jax.Array] = None,
                          tau_obj: float = 10.0,
-                         init: Optional[_Carry] = None) -> SimResult:
+                         init: Optional[_Carry] = None,
+                         adaptive: Optional[RLSConfig] = None,
+                         design: Optional[PlantProfile] = None,
+                         collect_traces: bool = True,
+                         summary_warmup: int = 0) -> SimResult:
     """One fully-jitted closed-loop run (drop-in for NRM.run_simulated).
 
     Pass either `epsilon` (gains placed from the profile's identified
     model) or explicit `gains` (e.g. designed on a different profile, as
-    in the gain-shift experiments)."""
+    in the gain-shift experiments). With `adaptive=RLSConfig(...)` the
+    RLS estimator runs inside the scan, re-placing the PI gains online;
+    `design` names the model the initial gains were placed on (defaults
+    to the plant profile) — the estimator linearizes against it. An
+    `init` carry built by `resume_init` continues a previous run
+    (including its estimator state when `rls=` was passed)."""
     profile = _resolve(profile)
     if gains is None:
         if epsilon is None:
             raise ValueError("pass epsilon or gains")
         gains = PIGains.from_model(profile, epsilon, tau_obj)
+    rls_vals = None
+    if adaptive is not None:
+        rls_vals = rls_values(adaptive, _resolve(design or profile), gains)
+        if init is not None and init.rls is None:
+            # resume carry predates the estimator: start a fresh one so
+            # adaptive= is honoured rather than silently dropped
+            init = init._replace(
+                rls=rls_init(rls_vals, gains.k_p, gains.k_i))
+    elif init is not None and init.rls is not None:
+        raise ValueError("init carries RLS state but adaptive=None; pass "
+                         "the RLSConfig so estimator params are traced")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     if key is None:
         key = jax.random.PRNGKey(seed)
-    traces, final = _jit_run(max_steps)(
-        profile_values(profile), gains_values(gains), init,
+    traces, final = _jit_run(max_steps, collect_traces)(
+        profile_values(profile), gains_values(gains), rls_vals, init,
         jnp.float32(total_work), jnp.float32(max_time), jnp.float32(dt),
-        key)
-    n = int(np.asarray(traces["valid"]).sum())
-    trimmed = {k: np.asarray(v)[:n] for k, v in traces.items()
-               if k != "valid"}
+        jnp.float32(summary_warmup), key)
+    # device-side trim: ONE scalar (the live-step counter) decides the
+    # slice, so only n real steps cross to host — not the padded buffers
+    n = int(final.steps)
+    trimmed = {} if traces is None else {
+        k: np.asarray(v[:n]) for k, v in traces.items() if k != "valid"}
     return SimResult(traces=trimmed,
                      exec_time=float(final.t),
                      energy=float(final.plant.energy),
@@ -318,7 +522,12 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                      pi_state=jax.tree_util.tree_map(np.asarray, final.pi),
                      plant_state=jax.tree_util.tree_map(np.asarray,
                                                         final.plant),
-                     pcap=float(final.pcap))
+                     pcap=float(final.pcap),
+                     summary=jax.tree_util.tree_map(
+                         np.asarray, _summary_dict(final,
+                                                   _hist_edges(profile))),
+                     rls_state=None if final.rls is None else
+                     jax.tree_util.tree_map(np.asarray, final.rls))
 
 
 def sweep(profiles: Union[str, PlantProfile,
@@ -328,12 +537,22 @@ def sweep(profiles: Union[str, PlantProfile,
           total_work: float,
           max_time: float = 3600.0,
           dt: float = 1.0,
-          tau_obj: float = 10.0) -> SweepResult:
-    """Vmapped closed-loop grid: profiles x epsilons x seeds, one compile.
+          tau_obj: float = 10.0,
+          adaptive: Union[None, RLSConfig, Sequence[RLSConfig]] = None,
+          collect_traces: bool = True,
+          summary_warmup: int = 0) -> SweepResult:
+    """Vmapped closed-loop grid: profiles x epsilons [x rls-configs] x
+    seeds, one compile.
 
-    The compiled function is cached by scan length only — plant and gain
-    parameters are traced — so repeated sweeps over different profiles or
-    epsilon grids reuse the same executable."""
+    The compiled function is cached by scan length and mode only — plant,
+    gain AND estimator parameters are traced — so repeated sweeps over
+    different profiles, epsilon grids or RLS hyperparameter grids reuse
+    the same executable. Pass `adaptive=` a single RLSConfig (axis
+    squeezed) or a sequence (inserts an A axis between epsilons and
+    seeds) to gain-schedule every run; `collect_traces=False` switches to
+    the O(grid)-memory summary mode for very large grids.
+    `summary_warmup` excludes each run's first steps (the descent
+    transient) from the online summary reductions only."""
     single = isinstance(profiles, (str, PlantProfile))
     profs = [_resolve(p) for p in ([profiles] if single else profiles)]
     eps = [float(e) for e in epsilons]
@@ -346,19 +565,46 @@ def sweep(profiles: Union[str, PlantProfile,
         jnp.stack([gains_values(PIGains.from_model(p, e, tau_obj))
                    for e in eps]) for p in profs])
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    single_cfg = isinstance(adaptive, RLSConfig)
+    rv = None
+    if adaptive is not None:
+        cfgs = [adaptive] if single_cfg else list(adaptive)
+        if not cfgs:
+            raise ValueError("adaptive= needs at least one RLSConfig")
+        # kl_ref/tau_obj depend only on the profile (k_i0 is epsilon-
+        # independent), so the traced grid is (P, A, 5)
+        rv = jnp.stack([
+            jnp.stack([rls_values(c, p,
+                                  PIGains.from_model(p, eps[0], tau_obj))
+                       for c in cfgs]) for p in profs])
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
-    traces, final = _jit_sweep(max_steps)(
-        pv, gv, jnp.float32(total_work), jnp.float32(max_time),
-        jnp.float32(dt), keys)
+    traces, final = _jit_sweep(max_steps, adaptive is not None,
+                               collect_traces)(
+        pv, gv, rv, jnp.float32(total_work), jnp.float32(max_time),
+        jnp.float32(dt), jnp.float32(summary_warmup), keys)
+    edges = {k: np.stack([_hist_edges(p)[k] for p in profs])
+             for k in ("progress_edges", "pcap_edges")}
+    summary = _summary_dict(final, edges)
+
+    def squeeze(tree, axis):
+        return jax.tree_util.tree_map(
+            lambda x: x[(slice(None),) * axis + (0,)]
+            if hasattr(x, "ndim") and x.ndim > axis else x, tree)
+
+    if adaptive is not None and single_cfg:
+        traces, final = squeeze(traces, 2), squeeze(final, 2)
+        summary = {k: v if k.endswith("_edges") else squeeze(v, 2)
+                   for k, v in summary.items()}
     if single:
-        traces = {k: v[0] for k, v in traces.items()}
-        final = jax.tree_util.tree_map(lambda x: x[0], final)
+        traces, final = squeeze(traces, 0), squeeze(final, 0)
+        summary = squeeze(summary, 0)
     return SweepResult(traces=traces,
                        exec_time=final.t,
                        energy=final.plant.energy,
                        work=final.plant.work,
                        completed=final.plant.work >= total_work,
-                       n_steps=traces["valid"].sum(-1))
+                       n_steps=final.steps,
+                       summary=summary)
 
 
 @functools.lru_cache(maxsize=None)

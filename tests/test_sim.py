@@ -1,15 +1,19 @@
 """Scan engine (repro.core.sim): equivalence with the stateful NRM loop,
-vmapped sweep shapes/correctness, and the Eq. 3 replay helper."""
+the in-scan RLS estimator vs its numpy oracle, trace-free summary mode
+vs full-trace reductions, vmapped sweep shapes/correctness, and the
+Eq. 3 replay helper."""
 import dataclasses
 
 import numpy as np
 import pytest
 
 from repro.configs.base import PowerControlConfig
+from repro.core.adaptive import RLSAdapter, RLSConfig
 from repro.core.controller import PIGains
 from repro.core.nrm import NRM
 from repro.core.plant import PROFILES, pcap_linearize
-from repro.core.sim import replay_model, simulate_closed_loop, sweep
+from repro.core.sim import (hist_quantile, replay_model,
+                            simulate_closed_loop, sweep)
 
 
 @pytest.mark.parametrize("name", ["gros", "dahu"])
@@ -96,6 +100,129 @@ def test_early_exit_mask_freezes_state():
     energy = np.asarray(res.traces["energy"])[0, 0]
     assert (energy[n:] == energy[n - 1]).all()  # frozen after completion
     assert float(res.exec_time[0, 0]) == pytest.approx(float(n))
+
+
+def test_scan_rls_matches_numpy_adapter():
+    """The in-scan RLS estimator and the numpy RLSAdapter are the same
+    algorithm: driven with identical (progress, prev pcap_L) sequences —
+    taken from an adaptive gain-shift run — their theta / tau_hat /
+    K_L_hat trajectories must agree (f32 vs f64 accumulation only)."""
+    design = PROFILES["gros"]
+    shifted = dataclasses.replace(design, K_L=design.K_L * 2)
+    gains = PIGains.from_model(design, 0.1)
+    res = simulate_closed_loop(shifted, gains=gains, total_work=3000.0,
+                               seed=6, adaptive=RLSConfig(),
+                               design=design)
+    assert res.completed and res.rls_state is not None
+    tr, n = res.traces, res.n_steps
+    # the estimator's pcap_L input at step i is the linearized command
+    # applied that period, i.e. the previous step's traced command
+    prev_pl = np.concatenate(
+        [[float(pcap_linearize(design, design.pcap_max))],
+         np.asarray(pcap_linearize(design, tr["pcap"][:-1]))])
+    oracle = RLSAdapter(gains, design)
+    g = gains
+    th = np.zeros((n, 2))
+    tau = np.zeros(n)
+    kl = np.zeros(n)
+    for i in range(n):
+        g = oracle.update(g, float(tr["progress"][i]),
+                          float(prev_pl[i]), 1.0)
+        th[i] = oracle.theta
+        tau[i], kl[i] = oracle.tau_hat, oracle.kl_hat
+    np.testing.assert_allclose(tr["theta1"], th[:, 0], rtol=0.02,
+                               atol=1e-3)
+    np.testing.assert_allclose(tr["theta2"], th[:, 1], atol=5e-3)
+    np.testing.assert_allclose(tr["tau_hat"], tau, rtol=0.05, atol=0.02)
+    np.testing.assert_allclose(tr["kl_hat"], kl, rtol=0.01)
+    # the final carried state mirrors the last traced estimates
+    assert float(res.rls_state.kl_hat) == pytest.approx(
+        float(tr["kl_hat"][-1]))
+
+
+def test_nrm_adaptive_runs_on_engine_and_threads_rls_state():
+    """run_simulated with adaptive=True must ride the scan engine (RLS
+    trace keys present) and carry the estimator across calls."""
+    nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros",
+                                 adaptive=True))
+    tr = nrm.run_simulated(total_work=400.0, seed=2)
+    assert {"kl_hat", "tau_hat", "k_p", "k_i"} <= set(tr)
+    assert nrm._rls_state is not None
+    kl1 = float(nrm._rls_state.kl_hat)
+    # numpy adapter mirrors the engine (runtime control_step continuity)
+    assert nrm._adaptive.kl_hat == pytest.approx(kl1)
+    tr2 = nrm.run_simulated(total_work=800.0, seed=3)
+    assert float(tr2["work"][0]) > 400.0  # resumed, not restarted
+    # estimator continued (history survives across the call boundary)
+    assert nrm._adaptive._prev is not None
+
+
+def test_adaptive_resume_without_rls_state_starts_estimator():
+    """A resume carry that predates the estimator must still honour
+    adaptive= (fresh RLS state), not silently run fixed-gain."""
+    from repro.core.controller import pi_init
+    from repro.core.plant import plant_init
+    from repro.core.sim import resume_init
+    p = PROFILES["gros"]
+    g = PIGains.from_model(p, 0.1)
+    init = resume_init(plant_init(p), pi_init(g), p.pcap_max)
+    res = simulate_closed_loop(p, gains=g, total_work=300.0, seed=1,
+                               init=init, adaptive=RLSConfig())
+    assert res.rls_state is not None
+    assert "kl_hat" in res.traces
+
+
+def test_adaptive_sweep_grid_axis_and_squeeze():
+    cfgs = [RLSConfig(lam=0.99), RLSConfig(lam=0.995),
+            RLSConfig(lam=0.999)]
+    res = sweep("gros", [0.1, 0.2], range(2), total_work=500.0,
+                max_time=600.0, adaptive=cfgs, collect_traces=False)
+    assert res.exec_time.shape == (2, 3, 2)  # (E, A, S), profile squeezed
+    assert bool(np.asarray(res.completed).all())
+    assert res.traces is None
+    # single RLSConfig squeezes the A axis like a single profile does
+    res1 = sweep("gros", [0.1, 0.2], range(2), total_work=500.0,
+                 max_time=600.0, adaptive=RLSConfig(),
+                 collect_traces=False)
+    assert res1.exec_time.shape == (2, 2)
+
+
+def test_summary_mode_matches_trace_reductions():
+    """The online (in-carry) reductions must agree with the same
+    statistics computed from full traces, and the summary-mode executable
+    must produce identical results to the full-trace one."""
+    full = sweep("gros", [0.1, 0.3], range(3), total_work=900.0,
+                 max_time=1200.0)
+    lean = sweep("gros", [0.1, 0.3], range(3), total_work=900.0,
+                 max_time=1200.0, collect_traces=False)
+    assert lean.traces is None and full.traces is not None
+    for k in ("exec_time", "energy", "n_steps"):
+        np.testing.assert_array_equal(np.asarray(getattr(full, k)),
+                                      np.asarray(getattr(lean, k)))
+    for k in ("progress_mean", "power_mean", "progress_hist",
+              "pcap_hist"):
+        np.testing.assert_allclose(np.asarray(full.summary[k]),
+                                   np.asarray(lean.summary[k]), rtol=1e-6)
+    # online moments == trace reductions
+    np.testing.assert_allclose(np.asarray(full.summary["progress_mean"]),
+                               full.masked_mean("progress"), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(full.summary["power_mean"]),
+                               full.masked_mean("power"), rtol=1e-4)
+    # histogram median-sketch == exact trace median, to half a bin width
+    med = hist_quantile(full.summary["progress_hist"],
+                        full.summary["progress_edges"], 0.5)
+    prog = np.asarray(full.traces["progress"])
+    valid = np.asarray(full.traces["valid"])
+    edges = np.asarray(full.summary["progress_edges"])
+    half_bin = 0.5 * (edges[1] - edges[0])
+    for e in range(2):
+        for s in range(3):
+            exact = np.median(prog[e, s][valid[e, s]])
+            assert abs(med[e, s] - exact) <= half_bin + 1e-6
+    # per-run histogram mass equals the live-step count
+    np.testing.assert_allclose(
+        np.asarray(full.summary["progress_hist"]).sum(-1),
+        np.asarray(full.n_steps), rtol=1e-6)
 
 
 def test_replay_model_matches_reference_loop():
