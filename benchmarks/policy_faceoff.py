@@ -1,0 +1,99 @@
+"""Policy face-off: PI vs offline-RL vs duty-cycle on the paper's
+cluster profiles (Table 2), one heterogeneous-policy sweep.
+
+Pipeline per run:
+
+1. Harvest a transition dataset from a full-trace PI sweep
+   (`policies.build_dataset`) and train the fitted-Q offline-RL policy
+   (`policies.fit_offline_rl`) — training is pure JAX and jits.
+2. Race the three policies down the sweep's policy axis
+   (`sweep(policies=[...])`, summary mode): profiles x policies x seeds
+   in ONE compiled call via the lax.switch engine.
+3. Report per (profile, policy): mean exec time, energy, setpoint
+   tracking (median progress via `hist_quantile`) and mean power; the
+   whole block is appended to BENCH_sim.json through
+   `benchmarks.telemetry.append_entry` so the policy-quality trajectory
+   stays machine-readable across PRs.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+
+PROFS = ("gros", "dahu", "yeti")
+EPS = 0.10
+
+
+def run(quick: bool = True) -> List[Row]:
+    import jax
+
+    from benchmarks import telemetry
+    from repro.core.plant import PROFILES
+    from repro.core.policies import (DutyCyclePolicy, PIPolicy,
+                                     build_dataset, fit_offline_rl)
+    from repro.core.sim import hist_quantile, sweep
+
+    rows: list[Row] = []
+    harvest_seeds = range(2 if quick else 8)
+    race_seeds = range(5 if quick else 30)
+    total_work, max_time = 2000.0, 1024.0
+
+    # 1) harvest PI transitions + fit the offline-RL policy
+    t0 = time.time()
+    har = sweep(PROFS, [EPS], harvest_seeds, total_work=total_work,
+                max_time=max_time)
+    parts = [build_dataset(
+        {k: np.asarray(v)[i] for k, v in har.traces.items()},
+        PROFILES[p], EPS) for i, p in enumerate(PROFS)]
+    dataset = {k: np.concatenate([d[k] for d in parts]) for k in parts[0]}
+    rl = fit_offline_rl(dataset, n_iters=30 if quick else 100)
+    fit_s = time.time() - t0
+    rows.append(("faceoff/fit_offline_rl", fit_s * 1e6,
+                 f"transitions={len(dataset['s'])};"
+                 f"w={np.round(rl.weights, 3).tolist()}"))
+
+    # 2) the race: one heterogeneous-policy sweep, summary mode
+    policies = [PIPolicy(), rl, DutyCyclePolicy()]
+    names = ("pi", "offline_rl", "dutycycle")
+    t0 = time.time()
+    res = sweep(PROFS, [EPS], race_seeds, total_work=total_work,
+                max_time=max_time, policies=policies,
+                collect_traces=False, summary_warmup=30)
+    jax.block_until_ready(res.exec_time)
+    race_s = time.time() - t0
+
+    # 3) per-(profile, policy) statistics; shapes are (P, E=1, A, S)
+    entry = {"epsilon": EPS, "seconds": round(race_s, 3),
+             "runs": len(PROFS) * len(policies) * len(race_seeds),
+             "per_policy": {}}
+    for a, pname in enumerate(names):
+        per_prof = {}
+        for p, prof in enumerate(PROFS):
+            setpoint = (1.0 - EPS) * PROFILES[prof].progress_max
+            med = hist_quantile(
+                res.summary["progress_hist"][p, 0, a],
+                res.summary["progress_edges"][p], 0.5)
+            stats = {
+                "time_mean": float(np.asarray(
+                    res.exec_time[p, 0, a]).mean()),
+                "energy_mean": float(np.asarray(
+                    res.energy[p, 0, a]).mean()),
+                "power_mean": float(np.asarray(
+                    res.summary["power_mean"][p, 0, a]).mean()),
+                "progress_med_rel": float(np.median(med) / setpoint),
+                "completed": float(np.asarray(
+                    res.completed[p, 0, a]).mean()),
+            }
+            per_prof[prof] = stats
+            rows.append((f"faceoff/{pname}/{prof}", race_s * 1e6,
+                         f"t={stats['time_mean']:.0f}s;"
+                         f"E={stats['energy_mean']:.0f}J;"
+                         f"prog/set={stats['progress_med_rel']:.3f}"))
+        entry["per_policy"][pname] = per_prof
+    telemetry.append_entry("policy_faceoff", entry)
+    rows.append(("faceoff/written", 0.0, str(telemetry.BENCH_PATH)))
+    return rows

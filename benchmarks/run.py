@@ -24,7 +24,8 @@ def main() -> None:
 
     from benchmarks import (beyond_adaptive, fig3_system_analysis,
                             fig4_static, fig5_dynamics, fig6_control,
-                            fig7_pareto, roofline, telemetry)
+                            fig7_pareto, policy_faceoff, roofline,
+                            telemetry)
     modules = {
         "fig3": fig3_system_analysis,
         "fig4": fig4_static,
@@ -32,6 +33,7 @@ def main() -> None:
         "fig6": fig6_control,
         "fig7": fig7_pareto,
         "beyond": beyond_adaptive,
+        "faceoff": policy_faceoff,
         "roofline": roofline,
         # last: times the flagship engine workloads and writes the
         # machine-readable BENCH_sim.json perf record at the repo root

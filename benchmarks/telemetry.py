@@ -83,11 +83,41 @@ def collect(quick: bool = True) -> dict:
     }
 
 
+def _read_bench() -> dict:
+    """Current BENCH_sim.json contents (empty skeleton if missing or
+    corrupt) — the single reader both writers below go through."""
+    if BENCH_PATH.exists():
+        try:
+            return json.loads(BENCH_PATH.read_text())
+        except json.JSONDecodeError:
+            pass
+    return {"schema": 1, "entries": {}}
+
+
+def append_entry(name: str, payload: dict) -> None:
+    """Merge one named entry into BENCH_sim.json (creating it if needed)
+    without disturbing the other entries — the hook other benchmark
+    modules (e.g. policy_faceoff) use to persist machine-readable
+    results."""
+    data = _read_bench()
+    data.setdefault("entries", {})[name] = payload
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+
+
+_OWNED_PREFIXES = ("fig7_sweep", "adaptive_grid", "fleet_")
+
+
 def run(quick: bool = True):
     data = collect(quick)
+    fresh = data["entries"]
+    # keep entries appended by OTHER modules; prune stale/renamed
+    # telemetry-owned names so the record stays a snapshot of this run
+    prev = {k: v for k, v in _read_bench().get("entries", {}).items()
+            if not k.startswith(_OWNED_PREFIXES)}
+    data["entries"] = {**prev, **fresh}
     BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
     rows: list[Row] = []
-    for name, e in data["entries"].items():
+    for name, e in fresh.items():
         rows.append((f"telemetry/{name}", e["warm_s"] * 1e6,
                      f"cold={e['cold_s']}s;warm={e['warm_s']}s;"
                      f"runs_per_sec={e['runs_per_sec']}"))

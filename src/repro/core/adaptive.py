@@ -125,6 +125,34 @@ def rls_step(rls_vals, s: RLSState, progress, pcap_l, dt) -> RLSState:
                     kl_hat=jnp.asarray(kl_hat, jnp.float32))
 
 
+# Flat packing of RLSState for the uniform policy-state vector carried by
+# the scan engine (repro.core.policies): theta(2) P(4) prev_phi(2)
+# has_prev(1) since_update(1) k_p k_i tau_hat kl_hat.
+RLS_STATE_SIZE = 14
+
+
+def rls_pack(s: RLSState) -> jnp.ndarray:
+    """RLSState -> (RLS_STATE_SIZE,) f32 vector (policy-state packing)."""
+    return jnp.concatenate([
+        jnp.asarray(s.theta, jnp.float32),
+        jnp.asarray(s.P, jnp.float32).reshape(4),
+        jnp.asarray(s.prev_phi, jnp.float32),
+        jnp.stack([jnp.asarray(s.has_prev, jnp.float32),
+                   jnp.asarray(s.since_update, jnp.float32),
+                   jnp.asarray(s.k_p, jnp.float32),
+                   jnp.asarray(s.k_i, jnp.float32),
+                   jnp.asarray(s.tau_hat, jnp.float32),
+                   jnp.asarray(s.kl_hat, jnp.float32)])])
+
+
+def rls_unpack(v) -> RLSState:
+    """Inverse of `rls_pack` (has_prev round-trips through a 0/1 float)."""
+    return RLSState(theta=v[0:2], P=v[2:6].reshape(2, 2),
+                    prev_phi=v[6:8], has_prev=v[8] > 0.5,
+                    since_update=v[9], k_p=v[10], k_i=v[11],
+                    tau_hat=v[12], kl_hat=v[13])
+
+
 @dataclasses.dataclass
 class RLSAdapter:
     """Numpy reference estimator (equivalence oracle for `rls_step`)."""

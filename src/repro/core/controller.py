@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.plant import PlantProfile, pcap_linearize
@@ -68,6 +69,16 @@ class PIGains:
                           self.linearize(self.pcap_max))
         power = self.beta - jnp.log(-pcap_l) / self.alpha
         return (power - self.b) / self.a
+
+
+# PIGains rides through jit/vmap/lax.switch as a pytree of (possibly
+# traced) scalars — the policy subsystem passes it inside PolicyObs, and
+# lax.switch operands must be pytrees. Field order matches __init__.
+jax.tree_util.register_pytree_node(
+    PIGains,
+    lambda g: ((g.k_p, g.k_i, g.setpoint, g.pcap_min, g.pcap_max,
+                g.a, g.b, g.alpha, g.beta), None),
+    lambda _, ch: PIGains(*ch))
 
 
 class PIState(NamedTuple):

@@ -3,39 +3,50 @@
 Two levels:
 
 * **node level** — the paper's full control period, one per node: the
-  scan engine's fused plant/heartbeat/PI step (`repro.core.sim.
-  engine_step`) vmapped across the fleet. Fleet runs therefore share the
-  single-node engine's compiled dynamics (and its persistent XLA cache)
-  instead of maintaining a duplicate hand-rolled step.
+  scan engine's fused plant/heartbeat/policy step (`repro.core.sim.
+  engine_step`) vmapped across the fleet with PER-NODE traced plant,
+  gain and policy parameters. Fleets can therefore be heterogeneous in
+  both hardware (a mix of plant-profile classes — gros next to dahu
+  next to TPU hosts) and control policy (`repro.core.policies`: PI on
+  one class, duty-cycle or offline-RL on another), while every node
+  still runs through the single-node engine's compiled dynamics.
 * **cluster level** — a slow outer loop that splits a global power budget
   across nodes every `reallocate_every` periods. Water-filling on the
-  previous period's measured progress: nodes lagging the fleet median
-  get more budget (straggler mitigation falls out naturally). The
-  allocation enters each node's period as `cap_limit` — the applied
-  command is min(PI command, allocation).
+  previous period's SETPOINT-RELATIVE progress: nodes lagging the fleet
+  median get more budget (straggler mitigation falls out naturally), and
+  because the fill respects per-node actuator bounds, budget SHIFTS
+  across profile classes — a saturated low-demand class's surplus flows
+  to the class that can still convert watts into progress (the EcoShift
+  heterogeneous power-shifting scenario). The allocation enters each
+  node's period as `cap_limit`: the applied command is min(policy
+  command, allocation).
 
-The per-node PI remains exactly Eq. 4 — the cluster level only moves each
-node's cap budget, so the paper's stability analysis still applies within
-a reallocation window.
+The per-node controller remains exactly its policy's law (Eq. 4 for PI) —
+the cluster level only moves each node's cap budget, so the paper's
+stability analysis still applies within a reallocation window.
 
 The whole two-level run is one jitted scan, cached by (n_nodes, horizon
-bucket, budgeted) only — plant, gain, budget and reallocation cadence are
-traced — so e.g. the 1024-node benchmark compiles once per machine.
-`_simulate_fleet_reference` keeps the pre-refactor hand-rolled step as
-the equivalence oracle for tests.
+bucket, budgeted, policy branch set, n_classes) only — plant, gain,
+policy, budget and reallocation cadence are traced — so e.g. the
+1024-node benchmark compiles once per machine.
+`_simulate_fleet_reference` keeps the hand-rolled per-node step as the
+equivalence oracle for tests (per-node parameters included).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import policies as pol
 from repro.core import sim
-from repro.core.controller import PIGains, PIState, pi_init, pi_step
-from repro.core.plant import PlantProfile, PlantState, plant_init, plant_step
+from repro.core.controller import PIGains, pi_init, pi_step
+from repro.core.plant import PlantProfile, plant_step
+from repro.core.policies.pi import PIPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,18 +62,18 @@ class FleetConfig:
     straggler_boost: float = 1.0
 
 
-def _water_fill(profile: PlantProfile, budget: float, n: int,
-                weights: jnp.ndarray) -> jnp.ndarray:
-    """Split `budget` watts over n nodes proportionally to weights, clipped
-    to the actuator range.
+def _water_fill_bounds(lo, hi, budget, weights: jnp.ndarray) -> jnp.ndarray:
+    """Split `budget` watts over nodes proportionally to weights, clipped
+    to PER-NODE actuator bounds `lo`/`hi` (arrays or scalars).
 
     Starts from the clipped proportional target, then iteratively refines
     the CARRIED allocation: each round measures the remaining deficit (or
     surplus) and redistributes it over the nodes with room in that
     direction, so the total converges to the budget whenever it is
-    feasible (n*pcap_min <= budget <= n*pcap_max) and saturates at the
-    nearest bound otherwise."""
-    lo, hi = profile.pcap_min, profile.pcap_max
+    feasible (sum(lo) <= budget <= sum(hi)) and saturates at the nearest
+    bound otherwise. With heterogeneous bounds this is what shifts budget
+    across profile classes: a class pinned at its bound stops absorbing
+    the redistribution and the remainder flows to the class with room."""
     w = weights / jnp.maximum(weights.sum(), 1e-9)
     alloc = jnp.clip(budget * w, lo, hi)
 
@@ -77,30 +88,56 @@ def _water_fill(profile: PlantProfile, budget: float, n: int,
     return alloc
 
 
-@functools.lru_cache(maxsize=None)
-def _jit_fleet(n: int, scan_len: int, budgeted: bool):
-    """Two-level fleet run, compiled once per (fleet size, horizon bucket,
-    budgeted) — every scalar parameter is traced."""
+def _water_fill(profile: PlantProfile, budget: float, n: int,
+                weights: jnp.ndarray) -> jnp.ndarray:
+    """Homogeneous-bounds convenience wrapper around `_water_fill_bounds`."""
+    return _water_fill_bounds(jnp.full((n,), profile.pcap_min),
+                              jnp.full((n,), profile.pcap_max),
+                              budget, weights)
 
-    def run(profile_vals, gains_vals, budget, realloc_every, boost,
-            steps, dt, key):
-        profile = sim._unpack_profile(profile_vals)
-        gains = sim._unpack_gains(gains_vals)
+
+# packed-field indices, derived from sim's canonical packing order
+_F_PCAP_MIN = sim._PROFILE_FIELDS.index("pcap_min")
+_F_PCAP_MAX = sim._PROFILE_FIELDS.index("pcap_max")
+_G_SETPOINT = sim._GAIN_FIELDS.index("setpoint")
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fleet(n: int, scan_len: int, budgeted: bool,
+               branches=("pi",), n_classes: int = 1):
+    """Two-level fleet run, compiled once per (fleet size, horizon bucket,
+    budgeted, policy branch set, class count) — every scalar parameter,
+    per-node plant/gain row and policy value is traced."""
+
+    def run(profile_vals, gains_vals, policy_vals, class_ids, budget,
+            realloc_every, boost, steps, dt, key):
         max_time = steps * dt  # freeze (engine early-exit) past the horizon
         total_work = jnp.float32(jnp.inf)
+        lo = profile_vals[:, _F_PCAP_MIN]
+        hi = profile_vals[:, _F_PCAP_MAX]
+        setpoints = gains_vals[:, _G_SETPOINT]
+        seg = lambda x: jax.ops.segment_sum(x, class_ids,
+                                            num_segments=n_classes)
+        counts = jnp.maximum(seg(jnp.ones((n,))), 1.0)
 
         nodes0 = jax.vmap(
-            lambda _: sim._default_init(profile, gains))(jnp.arange(n))
+            lambda pv, gv, av: sim._default_init(
+                sim._unpack_profile(pv), sim._unpack_gains(gv),
+                branches, av))(profile_vals, gains_vals, policy_vals)
         if budgeted:
             v_step = jax.vmap(
-                lambda c, k, lim: sim.engine_step(
-                    profile, gains, c, total_work, max_time, dt, k,
-                    cap_limit=lim), in_axes=(0, 0, 0))
+                lambda pv, gv, av, c, k, lim: sim.engine_step(
+                    sim._unpack_profile(pv), sim._unpack_gains(gv), c,
+                    total_work, max_time, dt, k, policy=branches,
+                    policy_vals=av, cap_limit=lim),
+                in_axes=(0, 0, 0, 0, 0, 0))
         else:
             v_step = jax.vmap(
-                lambda c, k: sim.engine_step(
-                    profile, gains, c, total_work, max_time, dt, k),
-                in_axes=(0, 0))
+                lambda pv, gv, av, c, k: sim.engine_step(
+                    sim._unpack_profile(pv), sim._unpack_gains(gv), c,
+                    total_work, max_time, dt, k, policy=branches,
+                    policy_vals=av),
+                in_axes=(0, 0, 0, 0, 0))
 
         def step(carry, xs):
             nodes, alloc, prev_prog = carry
@@ -108,89 +145,188 @@ def _jit_fleet(n: int, scan_len: int, budgeted: bool):
 
             if budgeted:
                 # cluster level: periodic water-filling on the previous
-                # period's progress; stragglers (below fleet median) weigh
-                # more and receive a larger share of the budget
+                # period's setpoint-relative progress; stragglers (below
+                # the fleet median) weigh more and receive a larger share
                 def reallocate(_):
-                    med = jnp.median(prev_prog)
+                    rel = prev_prog / jnp.maximum(setpoints, 1e-9)
+                    med = jnp.median(rel)
                     lag = jnp.maximum(
-                        0.0, (med - prev_prog) / jnp.maximum(med, 1e-9))
-                    return _water_fill(profile, budget, n,
-                                       1.0 + boost * lag)
+                        0.0, (med - rel) / jnp.maximum(med, 1e-9))
+                    return _water_fill_bounds(lo, hi, budget,
+                                              1.0 + boost * lag)
 
                 alloc = jax.lax.cond(t % realloc_every == 0, reallocate,
                                      lambda _: alloc, None)
-                nodes, out = v_step(nodes, jax.random.split(k, n), alloc)
+                nodes, out = v_step(profile_vals, gains_vals, policy_vals,
+                                    nodes, jax.random.split(k, n), alloc)
             else:
-                nodes, out = v_step(nodes, jax.random.split(k, n))
+                nodes, out = v_step(profile_vals, gains_vals, policy_vals,
+                                    nodes, jax.random.split(k, n))
 
             row = {"progress_mean": out["progress"].mean(),
                    "progress_med": jnp.median(out["progress"]),
                    "power": out["power"].sum(),
-                   "pcap_mean": out["pcap"].mean()}
+                   "pcap_mean": out["pcap"].mean(),
+                   "power_class": seg(out["power"]),
+                   "progress_class": seg(out["progress"]) / counts,
+                   "pcap_class": seg(out["pcap"]) / counts}
+            if budgeted:
+                row["alloc_class"] = seg(alloc) / counts
             return (nodes, alloc, out["progress"]), row
 
         keys = jax.random.split(key, scan_len)
         (nodes, _, _), traces = jax.lax.scan(
-            step, (nodes0, jnp.full((n,), profile.pcap_max),
-                   jnp.zeros((n,))),
+            step, (nodes0, hi, jnp.zeros((n,))),
             (jnp.arange(scan_len), keys))
         traces["energy_total"] = nodes.plant.energy.sum()
         traces["work_total"] = nodes.plant.work.sum()
+        traces["energy_class"] = seg(nodes.plant.energy)
         return traces
 
     return jax.jit(run)
 
 
-def simulate_fleet(profile: PlantProfile, fc: FleetConfig, steps: int,
-                   seed: int = 0) -> dict:
-    """Run the two-level controller over a homogeneous fleet. Returns traces
-    aggregated per step: fleet progress mean/median, energy, caps."""
-    gains = PIGains.from_model(profile, fc.epsilon, fc.tau_obj)
-    scan_len = sim._bucket_steps(steps)
-    traces = _jit_fleet(fc.n_nodes, scan_len, fc.power_budget > 0)(
-        sim.profile_values(profile), sim.gains_values(gains),
-        jnp.float32(fc.power_budget), jnp.int32(fc.reallocate_every),
-        jnp.float32(fc.straggler_boost), jnp.float32(steps),
-        jnp.float32(fc.dt), jax.random.PRNGKey(seed))
-    return {k: (v[:steps] if getattr(v, "ndim", 0) else v)
-            for k, v in traces.items()}
-
-
-def _simulate_fleet_reference(profile: PlantProfile, fc: FleetConfig,
-                              steps: int, seed: int = 0) -> dict:
-    """Pre-refactor hand-rolled fleet step (per-node plant_step + pi_step,
-    raw measured progress, no heartbeat aggregation). Kept ONLY as the
-    statistical-equivalence oracle for the engine-backed simulate_fleet."""
-    gains = PIGains.from_model(profile, fc.epsilon, fc.tau_obj)
+def _fleet_layout(profile, fc: FleetConfig, node_class):
+    """Normalize (profile(s), node_class) -> (profiles, per-node class)."""
+    profs = ([profile] if isinstance(profile, PlantProfile)
+             else list(profile))
     n = fc.n_nodes
+    if node_class is None:
+        cls = np.arange(n) % len(profs)
+    else:
+        cls = np.asarray(node_class, np.int32)
+        if cls.shape != (n,):
+            raise ValueError(f"node_class must have shape ({n},)")
+        if cls.min() < 0 or cls.max() >= len(profs):
+            raise ValueError("node_class indexes outside the profile list")
+    return profs, cls
 
-    plant_states = jax.vmap(lambda i: plant_init(profile))(jnp.arange(n))
-    pi_states = jax.vmap(lambda i: pi_init(gains))(jnp.arange(n))
 
-    v_plant = jax.vmap(plant_step, in_axes=(None, 0, 0, None, 0))
-    v_pi = jax.vmap(pi_step, in_axes=(None, 0, 0, None))
+def _fleet_policies(policies, n_profiles: int, n: int, cls):
+    """Normalize policies= to one Policy per node: a single Policy (all
+    nodes), one per node, or one per profile class. When n_nodes equals
+    the class count the list is ambiguous; the PER-NODE reading wins
+    (``policies[i]`` is node i's policy, regardless of node_class)."""
+    if policies is None:
+        policies = PIPolicy()
+    if isinstance(policies, pol.Policy):
+        return [policies] * n
+    pls = list(policies)
+    if len(pls) == n:
+        return pls
+    if len(pls) == n_profiles:
+        return [pls[c] for c in cls]
+    raise ValueError(f"policies= must be one Policy, {n_profiles} "
+                     f"(per class) or {n} (per node); got {len(pls)}")
+
+
+def simulate_fleet(profile, fc: FleetConfig, steps: int, seed: int = 0, *,
+                   node_class: Optional[Sequence[int]] = None,
+                   policies: Union[None, pol.Policy,
+                                   Sequence[pol.Policy]] = None) -> dict:
+    """Run the two-level controller over a (possibly heterogeneous) fleet.
+
+    ``profile`` is a single PlantProfile or a sequence of profile CLASSES
+    with ``node_class`` mapping each node to its class (default:
+    round-robin). ``policies`` assigns the per-node control policy —
+    a single Policy, one per class, or one per node. Returns traces
+    aggregated per step: fleet progress mean/median, power, caps, plus
+    per-class power/progress/cap (and allocation, when budgeted) so
+    cross-class budget shifting is observable; ``class_counts`` gives the
+    node count per class."""
+    profs, cls = _fleet_layout(profile, fc, node_class)
+    n = fc.n_nodes
+    gains = [PIGains.from_model(p, fc.epsilon, fc.tau_obj) for p in profs]
+    node_pols = _fleet_policies(policies, len(profs), n, cls)
+    branches, kinds = pol.resolve_kinds(node_pols)
+
+    pv = np.stack([np.asarray(sim.profile_values(p)) for p in profs])[cls]
+    gv = np.stack([np.asarray(sim.gains_values(g)) for g in gains])[cls]
+    av = np.zeros((n, pol.POLICY_PARAM_DIM), np.float32)
+    cache = {}
+    for i, (p_, k_) in enumerate(zip(node_pols, kinds)):
+        ck = (int(cls[i]), p_, k_)
+        if ck not in cache:
+            cache[ck] = np.asarray(pol.policy_values(
+                p_, profs[cls[i]], gains[cls[i]], kind=k_))
+        av[i] = cache[ck]
+
+    scan_len = sim._bucket_steps(steps)
+    traces = _jit_fleet(n, scan_len, fc.power_budget > 0, branches,
+                        len(profs))(
+        jnp.asarray(pv), jnp.asarray(gv), jnp.asarray(av),
+        jnp.asarray(cls, jnp.int32), jnp.float32(fc.power_budget),
+        jnp.int32(fc.reallocate_every), jnp.float32(fc.straggler_boost),
+        jnp.float32(steps), jnp.float32(fc.dt), jax.random.PRNGKey(seed))
+    # trim only the TIME axis: per-step traces are (scan_len, ...);
+    # per-run reductions like energy_class are (n_classes,) and must
+    # pass through untouched
+    out = {k: (v[:steps] if getattr(v, "ndim", 0)
+               and v.shape[0] == scan_len else v)
+           for k, v in traces.items()}
+    out["class_counts"] = np.bincount(cls, minlength=len(profs))
+    return out
+
+
+def _simulate_fleet_reference(profile, fc: FleetConfig, steps: int,
+                              seed: int = 0,
+                              node_class: Optional[Sequence[int]] = None
+                              ) -> dict:
+    """Hand-rolled per-node fleet step (plant_step + pi_step on raw
+    measured progress, no heartbeat aggregation), generalized to per-node
+    profile classes. Kept ONLY as the statistical-equivalence oracle for
+    the engine-backed simulate_fleet."""
+    profs, cls = _fleet_layout(profile, fc, node_class)
+    n = fc.n_nodes
+    gains = [PIGains.from_model(p, fc.epsilon, fc.tau_obj) for p in profs]
+    pv = jnp.asarray(np.stack([np.asarray(sim.profile_values(p))
+                               for p in profs])[cls])
+    gv = jnp.asarray(np.stack([np.asarray(sim.gains_values(g))
+                               for g in gains])[cls])
+    class_ids = jnp.asarray(cls, jnp.int32)
+    n_classes = len(profs)
+    lo, hi = pv[:, _F_PCAP_MIN], pv[:, _F_PCAP_MAX]
+    setpoints = gv[:, _G_SETPOINT]
+    seg = lambda x: jax.ops.segment_sum(x, class_ids,
+                                        num_segments=n_classes)
+    counts = jnp.maximum(seg(jnp.ones((n,))), 1.0)
+
+    plant_states = jax.vmap(
+        lambda pvals: sim.plant_init(sim._unpack_profile(pvals)))(pv)
+    pi_states = jax.vmap(
+        lambda gvals: pi_init(sim._unpack_gains(gvals)))(gv)
+
+    v_plant = jax.vmap(
+        lambda pvals, s, cap, k: plant_step(
+            sim._unpack_profile(pvals), s, cap, fc.dt, k),
+        in_axes=(0, 0, 0, 0))
+    v_pi = jax.vmap(
+        lambda gvals, s, prog: pi_step(
+            sim._unpack_gains(gvals), s, prog, fc.dt),
+        in_axes=(0, 0, 0))
 
     def step(carry, xs):
         plant_s, pi_s, caps = carry
         t, key = xs
         keys = jax.random.split(key, n)
-        plant_s, meas = v_plant(profile, plant_s, caps, fc.dt, keys)
+        plant_s, meas = v_plant(pv, plant_s, caps, keys)
         progress = meas["progress"]
 
         def reallocate(args):
             pi_s, caps = args
-            med = jnp.median(progress)
-            lag = jnp.maximum(0.0, (med - progress) / jnp.maximum(med, 1e-9))
-            weights = 1.0 + fc.straggler_boost * lag  # stragglers weigh more
+            rel = progress / jnp.maximum(setpoints, 1e-9)
+            med = jnp.median(rel)
+            lag = jnp.maximum(0.0, (med - rel) / jnp.maximum(med, 1e-9))
+            weights = 1.0 + fc.straggler_boost * lag
             if fc.power_budget > 0:
-                caps = _water_fill(profile, fc.power_budget, n, weights)
+                caps = _water_fill_bounds(lo, hi, fc.power_budget, weights)
             return pi_s, caps
 
         pi_s, caps = jax.lax.cond(
             (fc.power_budget > 0) & (t % fc.reallocate_every == 0),
             reallocate, lambda a: a, (pi_s, caps))
 
-        pi_s, pi_caps = v_pi(gains, pi_s, progress, fc.dt)
+        pi_s, pi_caps = v_pi(gv, pi_s, progress)
         caps = jnp.where(fc.power_budget > 0,
                          jnp.minimum(pi_caps, caps), pi_caps)
         out = {
@@ -198,14 +334,17 @@ def _simulate_fleet_reference(profile: PlantProfile, fc: FleetConfig,
             "progress_med": jnp.median(progress),
             "power": meas["power"].sum(),
             "pcap_mean": caps.mean(),
+            "power_class": seg(meas["power"]),
+            "progress_class": seg(progress) / counts,
         }
         return (plant_s, pi_s, caps), out
 
-    caps0 = jnp.full((n,), profile.pcap_max)
+    caps0 = hi
     keys = jax.random.split(jax.random.PRNGKey(seed), steps)
     (plant_s, _, _), traces = jax.lax.scan(
         step, (plant_states, pi_states, caps0),
         (jnp.arange(steps), keys))
     traces["energy_total"] = plant_s.energy.sum()
     traces["work_total"] = plant_s.work.sum()
+    traces["energy_class"] = seg(plant_s.energy)
     return traces

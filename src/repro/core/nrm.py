@@ -81,7 +81,8 @@ class NRM:
 
     def __init__(self, pc_cfg: PowerControlConfig,
                  actuator: Optional[PowerActuator] = None,
-                 profile: Optional[PlantProfile] = None):
+                 profile: Optional[PlantProfile] = None,
+                 policy=None):
         self.cfg = pc_cfg
         self.profile = profile or PROFILES[pc_cfg.plant_profile]
         self.actuator = actuator or SimulatedPowerActuator(self.profile)
@@ -93,6 +94,13 @@ class NRM:
         self._t = 0.0
         self._adaptive = None
         self._rls_state = None  # engine-side estimator state (run_simulated)
+        # non-PI power policy (repro.core.policies); its packed state is
+        # threaded across run_simulated calls like the RLS estimator's
+        self._policy = policy
+        self._policy_state = None
+        if policy is not None and pc_cfg.adaptive:
+            raise ValueError("policy= replaces the PI controller; "
+                             "adaptive RLS only schedules PI gains")
         if pc_cfg.adaptive:
             from repro.core.adaptive import RLSAdapter, RLSConfig
             self._adaptive = RLSAdapter(self.gains, self.profile)
@@ -123,6 +131,10 @@ class NRM:
                      now: Optional[float] = None) -> ControlRecord:
         """One PI period. Pass ``now`` when an external clock (the training
         loop's simulated time) drives the schedule; dt is then derived."""
+        if self._policy is not None:
+            raise NotImplementedError(
+                "the runtime control_step drives the PI controller; "
+                "non-PI policies run via run_simulated")
         if now is not None:
             if dt is None:
                 dt = max(now - self._t, 1e-6)
@@ -149,17 +161,35 @@ class NRM:
         """Closed loop against the simulated plant until work completes.
 
         Delegates to the jitted `repro.core.sim` scan engine (one compiled
-        step fusing plant, heartbeat window, optional RLS gain scheduling
-        and PI command). NRM/actuator state (controller, estimator, plant,
-        last measurement, RNG) is threaded through, so repeated calls
-        continue where the last run stopped. The per-step Python loop
-        (`_run_simulated_python`) remains only as the equivalence oracle."""
+        step fusing plant, heartbeat window and the power-policy command —
+        PI / RLS-adaptive PI by default, any `repro.core.policies` policy
+        via NRM(policy=...)). NRM/actuator state (controller, estimator
+        or policy, plant, last measurement, RNG) is threaded through, so
+        repeated calls continue where the last run stopped. The per-step
+        Python loop (`_run_simulated_python`) remains only as the
+        equivalence oracle."""
         assert isinstance(self.actuator, SimulatedPowerActuator)
+        from repro.core import policies as pol
         from repro.core import sim
         from repro.core.adaptive import rls_init, rls_values
         kwargs = {}
         rls = None
-        if self._adaptive is not None:
+        policy_state = None
+        if self._policy is not None:
+            kwargs = {"policy": self._policy}
+            if (self._policy_state is None
+                    and self._policy.branch not in ("pi", "pi_rls")):
+                # first call, non-PI policy: fresh policy state. PI-branch
+                # policies leave policy_state None so resume_init packs
+                # the (possibly checkpoint-restored) controller.state,
+                # exactly like the default PI path
+                self._policy_state = pol.policy_init(
+                    self._policy,
+                    pol.policy_values(self._policy, self.profile,
+                                      self.gains),
+                    self.gains)
+            policy_state = self._policy_state
+        elif self._adaptive is not None:
             kwargs = {"adaptive": self._rls_cfg, "design": self.profile}
             rls = self._rls_state
             if rls is None:  # fresh estimator around the design model
@@ -168,7 +198,8 @@ class NRM:
                     self.gains.k_p, self.gains.k_i)
         init = sim.resume_init(self.actuator.state,
                                self.controller.state,
-                               self.actuator._pcap, rls=rls)
+                               self.actuator._pcap, rls=rls,
+                               policy_state=policy_state)
         # derive the engine's key from the actuator RNG (advanced after
         # every run) so a resumed segment at the same seed does not
         # replay the previous segment's noise stream
@@ -178,9 +209,14 @@ class NRM:
             total_work=total_work, max_time=max_time,
             dt=self.cfg.sampling_period, key=key, init=init, **kwargs)
         self._t = res.exec_time
-        self.controller.state = PIState(
-            prev_error=jnp.float32(res.pi_state.prev_error),
-            prev_pcap_l=jnp.float32(res.pi_state.prev_pcap_l))
+        if res.pi_state is not None:
+            self.controller.state = PIState(
+                prev_error=jnp.float32(res.pi_state.prev_error),
+                prev_pcap_l=jnp.float32(res.pi_state.prev_pcap_l))
+        if self._policy is not None:
+            # round-trip the packed policy state exactly like the RLS
+            # estimator's: the next call resumes, not restarts
+            self._policy_state = jnp.asarray(res.policy_state)
         self.actuator.state = jax.tree_util.tree_map(
             jnp.asarray, res.plant_state)
         self.actuator._pcap = res.pcap
@@ -190,7 +226,9 @@ class NRM:
                 "progress": float(res.traces["progress"][-1]),
                 "pcap": res.pcap,
             }
-        if res.rls_state is not None:
+        if res.rls_state is not None and self._adaptive is not None:
+            # pc_cfg.adaptive path only: an adaptive PIPolicy passed via
+            # policy= threads its estimator inside _policy_state instead
             self._rls_state = res.rls_state
             self._sync_adapter_from_engine(res.rls_state)
         # advance the actuator's RNG past this run so a later
@@ -251,11 +289,19 @@ class NRM:
 
     # ---- checkpointable state ----------------------------------------------
     def state_dict(self) -> dict:
-        return {
+        d = {
             "prev_error": float(self.controller.state.prev_error),
             "prev_pcap_l": float(self.controller.state.prev_pcap_l),
             "t": self._t,
         }
+        if self._policy_state is not None:
+            d["policy_state"] = np.asarray(self._policy_state,
+                                           np.float32).tolist()
+        if self._rls_state is not None:
+            from repro.core.adaptive import rls_pack
+            d["rls_state"] = np.asarray(rls_pack(self._rls_state),
+                                        np.float32).tolist()
+        return d
 
     def load_state_dict(self, d: dict) -> None:
         import jax.numpy as jnp
@@ -264,3 +310,31 @@ class NRM:
             prev_error=jnp.float32(d["prev_error"]),
             prev_pcap_l=jnp.float32(d["prev_pcap_l"]))
         self._t = float(d["t"])
+        # restore OR reset: a checkpoint without policy/estimator state
+        # (saved before any run) must not leave stale state from a
+        # previous run behind
+        ps = d.get("policy_state")
+        if ps is not None and self._policy is None:
+            raise ValueError("checkpoint carries policy state but this "
+                             "NRM has no policy=; configure the same "
+                             "policy before loading")
+        self._policy_state = (None if ps is None
+                              else jnp.asarray(ps, jnp.float32))
+        rs = d.get("rls_state")
+        if rs is not None and self._adaptive is None:
+            raise ValueError("checkpoint carries RLS estimator state but "
+                             "this NRM is not adaptive; set "
+                             "PowerControlConfig(adaptive=True) before "
+                             "loading")
+        if rs is None:
+            self._rls_state = None
+            if self._adaptive is not None:
+                # rebuild the numpy mirror + design gains alongside
+                from repro.core.adaptive import RLSAdapter
+                self._adaptive = RLSAdapter(self.gains, self.profile)
+                self.controller.gains = self.gains
+        else:
+            from repro.core.adaptive import rls_unpack
+            self._rls_state = rls_unpack(jnp.asarray(rs, jnp.float32))
+            if self._adaptive is not None:
+                self._sync_adapter_from_engine(self._rls_state)

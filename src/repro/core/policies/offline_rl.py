@@ -1,0 +1,157 @@
+"""Offline-RL power control (cf. Raj et al., "Offline Reinforcement-
+Learning-Based Power Control"): a fitted-Q, linear-in-features policy
+trained on transition datasets harvested from closed-loop sweeps.
+
+Pipeline (everything after harvesting is pure JAX and jits):
+
+1. ``build_dataset(traces, profile, epsilon)`` — turn `sweep(...,
+   collect_traces=True)` traces into (s, a, r, s') transitions. The state
+   is setpoint-relative progress s = progress/setpoint; the action is the
+   normalized cap u = (pcap-min)/(max-min); the reward trades normalized
+   power against performance debt: r = -power_norm - rho*max(0, 1 - s').
+2. ``fit_offline_rl(dataset)`` — fitted Q-iteration on the quadratic
+   feature map phi(s,u) = [1, s, s^2, u, u^2, s*u]: each sweep solves the
+   ridge-regularized least squares to the Bellman targets, the max over
+   next actions taken on the discrete candidate grid.
+3. ``OfflineRLPolicy(weights=...)`` — at deployment the greedy policy
+   evaluates Q on ``N_ACTIONS`` candidate caps spanning the actuator
+   range and applies the argmax. Weights live in the traced param vector,
+   so an ensemble of trained policies vmaps down the sweep's policy axis.
+
+State: [0] = previous normalized action (traced for analysis; the greedy
+policy itself is memoryless).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import PIGains
+from repro.core.plant import PlantProfile
+from repro.core.policies.base import (POLICY_STATE_DIM, Policy, pack_values,
+                                      register_branch)
+
+N_FEATURES = 6
+N_ACTIONS = 9  # candidate caps spanning [pcap_min, pcap_max]
+
+
+def features(s, u):
+    """phi(s, u) = [1, s, s^2, u, u^2, s*u], broadcasting over s/u."""
+    s, u = jnp.broadcast_arrays(jnp.asarray(s, jnp.float32),
+                                jnp.asarray(u, jnp.float32))
+    return jnp.stack([jnp.ones_like(s), s, s * s, u, u * u, s * u],
+                     axis=-1)
+
+
+def _rl_step(vals, state, obs):
+    w = vals[1:1 + N_FEATURES]
+    s = obs.progress / jnp.maximum(obs.gains.setpoint, 1e-9)
+    us = jnp.linspace(0.0, 1.0, N_ACTIONS)
+    q = features(s, us) @ w
+    u = us[jnp.argmax(q)]
+    g = obs.gains
+    pcap = g.pcap_min + u * (g.pcap_max - g.pcap_min)
+    return state.at[0].set(u), pcap
+
+
+def _rl_init(vals, gains):
+    # start at full power like every other policy
+    return jnp.zeros((POLICY_STATE_DIM,), jnp.float32).at[0].set(1.0)
+
+
+def _rl_extras(state):
+    return {"action": state[0]}
+
+
+register_branch("offline_rl", _rl_step, _rl_init, _rl_extras)
+
+
+@dataclasses.dataclass(frozen=True)
+class OfflineRLPolicy(Policy):
+    """Greedy fitted-Q policy; ``weights`` is the phi-coefficient tuple."""
+    weights: Tuple[float, ...] = (0.0,) * N_FEATURES
+
+    @property
+    def branch(self) -> str:
+        return "offline_rl"
+
+    def values(self, profile: PlantProfile, gains: PIGains) -> jnp.ndarray:
+        if len(self.weights) != N_FEATURES:
+            raise ValueError(f"OfflineRLPolicy needs {N_FEATURES} feature "
+                             f"weights, got {len(self.weights)}")
+        return pack_values(*self.weights)
+
+
+# ---- dataset harvesting (host-side, numpy) --------------------------------
+
+def build_dataset(traces: Dict[str, np.ndarray], profile: PlantProfile,
+                  epsilon: float, rho: float = 3.0) -> Dict[str, np.ndarray]:
+    """Transitions from closed-loop traces of ONE profile.
+
+    ``traces`` holds arrays shaped (..., T) — a `sweep(...,
+    collect_traces=True)` result's traces (or one `simulate_closed_loop`
+    run's, with T only). Consecutive live steps become (s, a, r, s')
+    rows; the trace's ``valid`` mask (when present) gates both endpoints.
+    Returns flat arrays {s, a, r, s2} of equal length N.
+    """
+    prog = np.asarray(traces["progress"], np.float32)
+    pcap = np.asarray(traces["pcap"], np.float32)
+    power = np.asarray(traces["power"], np.float32)
+    valid = np.asarray(traces.get("valid", np.ones_like(prog, bool)), bool)
+
+    setpoint = (1.0 - epsilon) * profile.progress_max
+    p_lo = float(profile.power_of_pcap(profile.pcap_min))
+    p_hi = float(profile.power_of_pcap(profile.pcap_max))
+
+    s = prog / max(setpoint, 1e-9)
+    a = ((pcap - profile.pcap_min)
+         / max(profile.pcap_max - profile.pcap_min, 1e-9))
+    pw = (power - p_lo) / max(p_hi - p_lo, 1e-9)
+
+    # a[t] is the command computed at t and applied over period t+1, so
+    # the transition is (s[t], a[t]) -> s[t+1] with the reward measured
+    # on the NEXT period's outcome
+    m = (valid[..., :-1] & valid[..., 1:]).reshape(-1)
+    s_t = s[..., :-1].reshape(-1)[m]
+    a_t = a[..., :-1].reshape(-1)[m]
+    s_n = s[..., 1:].reshape(-1)[m]
+    pw_n = pw[..., 1:].reshape(-1)[m]
+    r = -pw_n - rho * np.maximum(0.0, 1.0 - s_n)
+    return {"s": s_t, "a": a_t, "r": r.astype(np.float32), "s2": s_n}
+
+
+# ---- fitted Q-iteration (pure JAX) ----------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_iters",))
+def _fqi(s, a, r, s2, gamma, ridge, n_iters: int):
+    phi = features(s, a)                                   # (N, F)
+    us = jnp.linspace(0.0, 1.0, N_ACTIONS)
+    phi2 = features(s2[:, None], us[None, :])              # (N, L, F)
+    A = phi.T @ phi + ridge * jnp.eye(N_FEATURES, dtype=jnp.float32)
+
+    def body(w, _):
+        q2 = (phi2 @ w).max(-1)                            # (N,)
+        y = r + gamma * q2
+        w = jnp.linalg.solve(A, phi.T @ y)
+        return w, None
+
+    w, _ = jax.lax.scan(body, jnp.zeros((N_FEATURES,), jnp.float32),
+                        None, length=n_iters)
+    return w
+
+
+def fit_offline_rl(dataset: Dict[str, np.ndarray], gamma: float = 0.9,
+                   ridge: float = 1e-3, n_iters: int = 50
+                   ) -> OfflineRLPolicy:
+    """Fitted Q-iteration over a harvested transition set -> policy."""
+    if len(dataset["s"]) == 0:
+        raise ValueError("empty transition dataset")
+    w = _fqi(jnp.asarray(dataset["s"]), jnp.asarray(dataset["a"]),
+             jnp.asarray(dataset["r"]), jnp.asarray(dataset["s2"]),
+             jnp.float32(gamma), jnp.float32(ridge), int(n_iters))
+    return OfflineRLPolicy(weights=tuple(float(x) for x in w))

@@ -4,12 +4,14 @@ The paper's evaluation is thousands of closed-loop runs sweeping the
 degradation grid eps across clusters and seeds. `NRM.run_simulated` used
 to drive ONE run as a Python while-loop with per-step jit dispatch; this
 module fuses the whole loop — plant dynamics (Eq. 3 + noise), heartbeat
-aggregation over the control window (Eq. 1 median), optional RLS gain
-scheduling (§5.2 extension, `repro.core.adaptive`) and the PI command
-(Eq. 4) — into a single `lax.scan` step. Plant, gain and RLS parameters
-enter the compiled function as traced arrays, so ONE compilation (keyed
-only by the scan length and the trace/summary mode) serves every
-profile, epsilon, seed and estimator hyperparameter.
+aggregation over the control window (Eq. 1 median), and the power-policy
+command (`repro.core.policies`: Eq. 4 PI / RLS-adaptive PI by default,
+offline-RL and duty-cycle policies as drop-in scan citizens) — into a
+single `lax.scan` step. Plant, gain and policy parameters enter the
+compiled function as traced arrays, so ONE compilation (keyed only by
+the scan length, the trace/summary mode and the policy branch set)
+serves every profile, epsilon, seed and policy hyperparameter; a
+heterogeneous policy list dispatches through one `lax.switch` engine.
 
 Entry points:
 
@@ -49,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import os
 from pathlib import Path
 from typing import Dict, NamedTuple, Optional, Sequence, Union
@@ -57,12 +60,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.adaptive import RLSConfig, RLSState, rls_init, rls_step, \
-    rls_values
+from repro.core import policies as pol
+from repro.core.adaptive import (RLSConfig, RLSState, rls_init, rls_pack,
+                                 rls_unpack, rls_values)
 from repro.core.controller import PIGains, PIState, pi_init, pi_step
 from repro.core.plant import (PROFILES, PlantProfile, PlantState,
                               pcap_linearize, plant_init, plant_step,
                               simulate)
+from repro.core.policies.pi import (PI_RLS_HI, PI_RLS_LO, PIPolicy,
+                                    pi_pack)
+
+logger = logging.getLogger("repro.core.sim")
 
 
 def enable_compilation_cache(path: Optional[str] = None) -> None:
@@ -78,14 +86,30 @@ def enable_compilation_cache(path: Optional[str] = None) -> None:
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
 
 
+_BUCKETS_SEEN: set = set()
+
+
 def _bucket_steps(n: int) -> int:
     """Round the scan length up to a power of two (min 256). Frozen steps
     after completion are no-ops, and `max_time` is enforced by a traced
     mask, so the only effect is that compiled engines are shared across
-    nearby horizons (and across processes via the persistent cache)."""
+    nearby horizons (and across processes via the persistent cache).
+
+    Crossing into a bucket this process has not used yet triggers a
+    fresh trace/compile; that is logged ONCE per new bucket so silent
+    recompiles show up in benchmark output instead of masquerading as a
+    slow sweep."""
     b = 256
     while b < n:
         b *= 2
+    if b not in _BUCKETS_SEEN:
+        if _BUCKETS_SEEN:
+            logger.warning(
+                "scan horizon %d steps crosses into new length bucket %d "
+                "(buckets used so far: %s): the first call in this bucket "
+                "traces/compiles a fresh engine", n, b,
+                sorted(_BUCKETS_SEEN))
+        _BUCKETS_SEEN.add(b)
     return b
 
 # Canonical packing order for traced plant / gain parameters.
@@ -177,7 +201,7 @@ def _hist_add(hist, x, lo, hi, nbins, live):
 
 class _Carry(NamedTuple):
     plant: PlantState
-    pi: PIState
+    pol: jnp.ndarray         # packed policy state (POLICY_STATE_DIM,)
     pcap: jnp.ndarray        # command applied next period [W]
     anchor_gap: jnp.ndarray  # time from last beat to window start [s]
     has_anchor: jnp.ndarray  # bool: any beat ever fired
@@ -185,55 +209,75 @@ class _Carry(NamedTuple):
     steps: jnp.ndarray       # live (pre-completion) step count
     done: jnp.ndarray        # bool: total_work reached
     summ: _Summary
-    rls: Optional[RLSState]  # None unless adaptive gain scheduling is on
+
+
+# state-vector slots of the PI branches; repro.core.policies.pi owns the
+# layout ([0]=prev_error [1]=prev_pcap_l [RLS_LO:RLS_HI]=packed RLSState)
+_PI_RLS_LO, _PI_RLS_HI = PI_RLS_LO, PI_RLS_HI
 
 
 def _default_init(profile: PlantProfile, gains: PIGains,
-                  rls_vals=None) -> _Carry:
-    rls = None if rls_vals is None else rls_init(rls_vals, gains.k_p,
-                                                 gains.k_i)
+                  policy=("pi",), policy_vals=None) -> _Carry:
+    if policy_vals is None:
+        policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     return _Carry(plant=plant_init(profile),
-                  pi=pi_init(gains),
+                  pol=pol.branch_init(policy)(policy_vals, gains),
                   pcap=jnp.float32(profile.pcap_max),
                   anchor_gap=jnp.float32(0.0),
                   has_anchor=jnp.array(False),
                   t=jnp.float32(0.0),
                   steps=jnp.int32(0),
                   done=jnp.array(False),
-                  summ=_summary_init(),
-                  rls=rls)
+                  summ=_summary_init())
 
 
 def resume_init(plant: PlantState, pi: PIState, pcap,
-                rls: Optional[RLSState] = None) -> _Carry:
+                rls: Optional[RLSState] = None,
+                policy_state=None) -> _Carry:
     """Carry that resumes a run from existing plant/controller (and
     optionally RLS estimator) state — the NRM delegation path; the
-    heartbeat window and the per-run summaries start fresh."""
-    return _Carry(plant=plant, pi=pi, pcap=jnp.float32(pcap),
+    heartbeat window and the per-run summaries start fresh. Pass
+    ``policy_state`` (a packed (POLICY_STATE_DIM,) vector from
+    `SimResult.policy_state`) to resume a non-PI policy; otherwise the
+    PI/RLS states are packed into the PI branch's layout."""
+    if policy_state is None:
+        vec = pi_pack(pi, None if rls is None else rls_pack(rls))
+        vec = vec.at[pol.BRANCH_TAG_SLOT].set(float(pol.branch_tag(
+            "pi_rls" if rls is not None else "pi")))
+    else:
+        vec = jnp.asarray(policy_state, jnp.float32)
+    return _Carry(plant=plant, pol=vec, pcap=jnp.float32(pcap),
                   anchor_gap=jnp.float32(0.0),
                   has_anchor=jnp.array(False),
                   t=jnp.float32(0.0),
                   steps=jnp.int32(0),
                   done=jnp.array(False),
-                  summ=_summary_init(),
-                  rls=rls)
+                  summ=_summary_init())
 
 
 def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
-                total_work, max_time, dt, key, *, rls_vals=None,
-                cap_limit=None, summary_from=0.0):
+                total_work, max_time, dt, key, *, policy=("pi",),
+                policy_vals=None, cap_limit=None, summary_from=0.0):
     """One fused control period: plant (Eq. 3) -> heartbeat median
-    (Eq. 1) -> optional RLS gain re-placement -> PI command (Eq. 4),
-    with early-exit-by-mask freezing and online summary reduction.
+    (Eq. 1) -> power-policy command (Eq. 4 PI by default), with
+    early-exit-by-mask freezing and online summary reduction.
+
+    The controller is dispatched through the `repro.core.policies`
+    contract: ``policy`` is a branch-name tuple (static; more than one
+    name switches on the traced kind in ``policy_vals[0]``) or a Policy
+    instance, and ``policy_vals`` the packed traced hyperparameters.
 
     Pure and vmap/scan-safe; `repro.core.hierarchy` vmaps it over fleet
     nodes with `cap_limit` carrying the cluster-level budget allocation
-    (the applied command is min(PI command, allocation)). `summary_from`
-    (traced) excludes the first steps — the descent transient — from the
-    online summary reductions (never from time/energy/work).
+    (the applied command is min(policy command, allocation)).
+    `summary_from` (traced) excludes the first steps — the descent
+    transient — from the online summary reductions (never from
+    time/energy/work).
 
     Returns (new_carry, out) where out holds this period's trace row.
     """
+    if policy_vals is None:
+        policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     kplant, khb = jax.random.split(key)
     plant_s, meas = plant_step(profile, c.plant, c.pcap, dt, kplant)
     t = c.t + dt
@@ -246,15 +290,9 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                            c.anchor_gap + dt)
     has_anchor = c.has_anchor | (n > 0)
 
-    g, rls = gains, c.rls
-    if rls is not None:
-        # same call order as the NRM loop: the estimator sees the PREVIOUS
-        # linearized command (pi.prev_pcap_l) alongside this period's
-        # aggregated progress, then this period's PI runs on the
-        # (possibly re-placed) gains
-        rls = rls_step(rls_vals, rls, progress, c.pi.prev_pcap_l, dt)
-        g = gains.with_gains(rls.k_p, rls.k_i)
-    pi_s, pcap = pi_step(g, c.pi, progress, dt)
+    obs = pol.PolicyObs(progress=progress, power=meas["power"], dt=dt,
+                        gains=gains)
+    pol_s, pcap = pol.branch_step(policy)(policy_vals, c.pol, obs)
     if cap_limit is not None:
         pcap = jnp.minimum(pcap, cap_limit)
 
@@ -262,9 +300,7 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     frz = lambda new, old: jax.tree_util.tree_map(
         lambda a, b: jnp.where(c.done, b, a), new, old)
     plant_s = frz(plant_s, c.plant)
-    pi_s = frz(pi_s, c.pi)
-    if rls is not None:
-        rls = frz(rls, c.rls)
+    pol_s = frz(pol_s, c.pol)
     pcap = jnp.where(c.done, c.pcap, pcap)
     anchor_gap = jnp.where(c.done, c.anchor_gap, anchor_gap)
     has_anchor = jnp.where(c.done, c.has_anchor, has_anchor)
@@ -291,31 +327,30 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     out = {"t": t, "progress": progress, "pcap": pcap,
            "power": power, "energy": plant_s.energy,
            "work": plant_s.work, "valid": ~c.done}
-    if rls is not None:
-        out.update({"k_p": rls.k_p, "k_i": rls.k_i,
-                    "tau_hat": rls.tau_hat, "kl_hat": rls.kl_hat,
-                    "theta1": rls.theta[0], "theta2": rls.theta[1]})
-    return _Carry(plant_s, pi_s, pcap, anchor_gap, has_anchor, t,
-                  c.steps + (~c.done).astype(jnp.int32), done, summ,
-                  rls), out
+    out.update(pol.branch_extras(policy)(pol_s))
+    return _Carry(plant_s, pol_s, pcap, anchor_gap, has_anchor, t,
+                  c.steps + (~c.done).astype(jnp.int32), done, summ), out
 
 
-def _scan_core(max_steps: int, collect: bool = True):
-    """Pure closed-loop run: (profile_vals, gains_vals, rls_vals|None,
-    init|None, total_work, max_time, dt, key) -> (traces|None,
-    final_carry). Adaptivity is keyed by the pytree structure of
-    rls_vals/init (None = fixed gains), so no extra static flag."""
+def _scan_core(max_steps: int, collect: bool = True,
+               branches=("pi",)):
+    """Pure closed-loop run: (profile_vals, gains_vals, policy_vals,
+    init|None, total_work, max_time, dt, summary_from, key) ->
+    (traces|None, final_carry). The policy branch set is static (part of
+    the jit key); its hyperparameters ride in the traced policy_vals."""
 
-    def run(profile_vals, gains_vals, rls_vals, init: Optional[_Carry],
-            total_work, max_time, dt, summary_from, key):
+    def run(profile_vals, gains_vals, policy_vals,
+            init: Optional[_Carry], total_work, max_time, dt,
+            summary_from, key):
         profile = _unpack_profile(profile_vals)
         gains = _unpack_gains(gains_vals)
-        carry0 = (_default_init(profile, gains, rls_vals)
+        carry0 = (_default_init(profile, gains, branches, policy_vals)
                   if init is None else init)
 
         def body(c: _Carry, k):
             c2, out = engine_step(profile, gains, c, total_work,
-                                  max_time, dt, k, rls_vals=rls_vals,
+                                  max_time, dt, k, policy=branches,
+                                  policy_vals=policy_vals,
                                   summary_from=summary_from)
             return c2, (out if collect else None)
 
@@ -326,25 +361,23 @@ def _scan_core(max_steps: int, collect: bool = True):
     return run
 
 
-# `init`/`rls_vals` are pytrees (or None); jit caches on their structure,
-# so fresh/resumed and fixed/adaptive variants trace separately.
+# `init` is a pytree (or None); jit caches on its structure, so fresh and
+# resumed variants trace separately. The branch tuple keys the policy's
+# static compute graph; all its hyperparameters are traced.
 @functools.lru_cache(maxsize=None)
-def _jit_run(max_steps: int, collect: bool = True):
-    return jax.jit(_scan_core(max_steps, collect))
+def _jit_run(max_steps: int, collect: bool = True, branches=("pi",)):
+    return jax.jit(_scan_core(max_steps, collect, branches))
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_sweep(max_steps: int, adaptive: bool = False,
-               collect: bool = True):
-    run = _scan_core(max_steps, collect)
-    f = lambda pv, gv, rv, tw, mt, dt, sf, key: run(pv, gv, rv, None, tw,
+def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True):
+    run = _scan_core(max_steps, collect, branches)
+    f = lambda pv, gv, av, tw, mt, dt, sf, key: run(pv, gv, av, None, tw,
                                                     mt, dt, sf, key)
-    f = jax.vmap(f, in_axes=(None,) * 7 + (0,))                      # seeds
-    if adaptive:
-        f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 5)       # cfgs
-    f = jax.vmap(f, in_axes=(None, 0) + (None,) * 6)                 # eps
-    f = jax.vmap(f, in_axes=(0, 0, 0 if adaptive else None)
-                 + (None,) * 5)                                      # profs
+    f = jax.vmap(f, in_axes=(None,) * 7 + (0,))                # seeds
+    f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 5)     # policies
+    f = jax.vmap(f, in_axes=(None, 0, None) + (None,) * 5)     # eps
+    f = jax.vmap(f, in_axes=(0, 0, 0) + (None,) * 5)           # profs
     return jax.jit(f)
 
 
@@ -385,7 +418,11 @@ def hist_quantile(hist, edges, q: float = 0.5) -> np.ndarray:
 
     `hist` has shape (..., N); `edges` is (N+1,) or (P, N+1) with P
     matching hist's leading axis (the sweep's profile axis). Accurate to
-    half a bin width — PROG_HIST_SPAN*K_L/PROG_BINS for progress."""
+    half a bin width — PROG_HIST_SPAN*K_L/PROG_BINS for progress.
+
+    Edge cases: an all-empty histogram yields NaN; q=0 / q=1 return the
+    centers of the lowest / highest occupied bins (a single-count
+    histogram therefore answers that bin for every q)."""
     hist = np.asarray(hist, np.float64)
     edges = np.asarray(edges, np.float64)
     centers = 0.5 * (edges[..., :-1] + edges[..., 1:])
@@ -394,9 +431,14 @@ def hist_quantile(hist, edges, q: float = 0.5) -> np.ndarray:
             (centers.shape[0],) + (1,) * (hist.ndim - 2)
             + (centers.shape[-1],))
     c = hist.cumsum(-1)
-    idx = (c >= q * c[..., -1:]).argmax(-1)
-    return np.take_along_axis(np.broadcast_to(centers, hist.shape),
-                              idx[..., None], -1)[..., 0]
+    total = c[..., -1:]
+    # strictly positive threshold so q=0 lands on the first OCCUPIED bin
+    # (empty leading bins satisfy c >= 0 but not c >= tiny)
+    thresh = np.maximum(q * total, np.finfo(np.float64).tiny)
+    idx = (c >= thresh).argmax(-1)
+    out = np.take_along_axis(np.broadcast_to(centers, hist.shape),
+                             idx[..., None], -1)[..., 0]
+    return np.where(total[..., 0] > 0, out, np.nan)
 
 
 def _summary_dict(final: _Carry, edges: Dict[str, np.ndarray]) -> Dict:
@@ -420,21 +462,24 @@ class SimResult:
     work: float
     completed: bool
     n_steps: int
-    pi_state: PIState
+    pi_state: Optional[PIState]  # None for non-PI policies
     plant_state: PlantState
     pcap: float
     summary: Dict[str, np.ndarray] = dataclasses.field(
         default_factory=dict)
     rls_state: Optional[RLSState] = None  # final estimator (adaptive runs)
+    # final packed policy state (resume via resume_init(policy_state=...))
+    policy_state: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Batched runs over profiles x epsilons [x rls-configs] x seeds.
+    """Batched runs over profiles x epsilons [x policies] x seeds.
 
     Trace arrays have shape (..., T) where ... is (P, E, S) — or
-    (P, E, A, S) for adaptive sweeps — with the P (and A) axes squeezed
-    away when a single profile (single RLSConfig) was passed. Frozen
+    (P, E, A, S) for policy/adaptive grids — with the P (and A) axes
+    squeezed away when a single profile (single Policy/RLSConfig) was
+    passed. Frozen
     (post-completion) steps carry `valid == False`. In summary mode
     (`collect_traces=False`) `traces` is None and only `summary` (plus
     the scalar reductions) is materialized: O(grid) memory, not
@@ -473,39 +518,71 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                          init: Optional[_Carry] = None,
                          adaptive: Optional[RLSConfig] = None,
                          design: Optional[PlantProfile] = None,
+                         policy: Optional[pol.Policy] = None,
                          collect_traces: bool = True,
                          summary_warmup: int = 0) -> SimResult:
     """One fully-jitted closed-loop run (drop-in for NRM.run_simulated).
 
     Pass either `epsilon` (gains placed from the profile's identified
     model) or explicit `gains` (e.g. designed on a different profile, as
-    in the gain-shift experiments). With `adaptive=RLSConfig(...)` the
-    RLS estimator runs inside the scan, re-placing the PI gains online;
-    `design` names the model the initial gains were placed on (defaults
-    to the plant profile) — the estimator linearizes against it. An
-    `init` carry built by `resume_init` continues a previous run
-    (including its estimator state when `rls=` was passed)."""
+    in the gain-shift experiments). The controller is a
+    `repro.core.policies` policy — `policy=` any Policy instance
+    (default: the paper's PI). `adaptive=RLSConfig(...)` is sugar for
+    ``policy=PIPolicy(adaptive=...)``: the RLS estimator runs inside the
+    scan, re-placing the PI gains online; `design` names the model the
+    initial gains were placed on (defaults to the plant profile) — the
+    estimator linearizes against it. An `init` carry built by
+    `resume_init` continues a previous run (including its estimator /
+    policy state when `rls=` / `policy_state=` was passed)."""
     profile = _resolve(profile)
     if gains is None:
         if epsilon is None:
             raise ValueError("pass epsilon or gains")
         gains = PIGains.from_model(profile, epsilon, tau_obj)
-    rls_vals = None
-    if adaptive is not None:
-        rls_vals = rls_values(adaptive, _resolve(design or profile), gains)
-        if init is not None and init.rls is None:
+    if policy is not None and adaptive is not None:
+        raise ValueError("pass policy= or adaptive=, not both "
+                         "(adaptive= is sugar for PIPolicy(adaptive=...))")
+    if policy is not None and design is not None:
+        raise ValueError("design= only applies to the adaptive= sugar; "
+                         "give the policy its design model directly "
+                         "(PIPolicy(adaptive=..., design=...))")
+    if policy is None:
+        policy = PIPolicy(adaptive=adaptive,
+                          design=None if design is None
+                          else _resolve(design))
+    branch = policy.branch
+    pvals = pol.policy_values(policy, profile, gains)
+    if init is not None:
+        # host-side resume validation/fix-ups (init is concrete here)
+        src = pol.tag_branch(int(np.asarray(init.pol)[
+            pol.BRANCH_TAG_SLOT]))
+        if src is not None and src != branch and not (
+                src == "pi" and branch == "pi_rls"):
+            # the one allowed upgrade is pi -> pi_rls (fresh estimator
+            # below); anything else would silently misread the slots
+            raise ValueError(
+                f"init policy state was produced by branch '{src}' but "
+                f"this run dispatches '{branch}'; resume with the same "
+                f"policy (pi state does upgrade to adaptive pi)")
+        rls_block = np.asarray(init.pol[_PI_RLS_LO:_PI_RLS_HI])
+        if branch == "pi_rls" and not rls_block.any():
             # resume carry predates the estimator: start a fresh one so
             # adaptive= is honoured rather than silently dropped
-            init = init._replace(
-                rls=rls_init(rls_vals, gains.k_p, gains.k_i))
-    elif init is not None and init.rls is not None:
-        raise ValueError("init carries RLS state but adaptive=None; pass "
-                         "the RLSConfig so estimator params are traced")
+            fresh = rls_init(pvals[1:6], gains.k_p, gains.k_i)
+            init = init._replace(pol=jnp.asarray(init.pol)
+                                 .at[_PI_RLS_LO:_PI_RLS_HI]
+                                 .set(rls_pack(fresh))
+                                 .at[pol.BRANCH_TAG_SLOT]
+                                 .set(float(pol.branch_tag("pi_rls"))))
+        elif branch == "pi" and rls_block.any():
+            raise ValueError("init carries RLS state but adaptive=None; "
+                             "pass the RLSConfig so estimator params are "
+                             "traced")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     if key is None:
         key = jax.random.PRNGKey(seed)
-    traces, final = _jit_run(max_steps, collect_traces)(
-        profile_values(profile), gains_values(gains), rls_vals, init,
+    traces, final = _jit_run(max_steps, collect_traces, (branch,))(
+        profile_values(profile), gains_values(gains), pvals, init,
         jnp.float32(total_work), jnp.float32(max_time), jnp.float32(dt),
         jnp.float32(summary_warmup), key)
     # device-side trim: ONE scalar (the live-step counter) decides the
@@ -513,21 +590,27 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
     n = int(final.steps)
     trimmed = {} if traces is None else {
         k: np.asarray(v[:n]) for k, v in traces.items() if k != "valid"}
+    vec = np.asarray(final.pol)
+    pi_state = (PIState(prev_error=vec[0], prev_pcap_l=vec[1])
+                if branch in ("pi", "pi_rls") else None)
+    rls_state = (jax.tree_util.tree_map(
+        np.asarray, rls_unpack(final.pol[_PI_RLS_LO:_PI_RLS_HI]))
+        if branch == "pi_rls" else None)
     return SimResult(traces=trimmed,
                      exec_time=float(final.t),
                      energy=float(final.plant.energy),
                      work=float(final.plant.work),
                      completed=bool(final.plant.work >= total_work),
                      n_steps=n,
-                     pi_state=jax.tree_util.tree_map(np.asarray, final.pi),
+                     pi_state=pi_state,
                      plant_state=jax.tree_util.tree_map(np.asarray,
                                                         final.plant),
                      pcap=float(final.pcap),
                      summary=jax.tree_util.tree_map(
                          np.asarray, _summary_dict(final,
                                                    _hist_edges(profile))),
-                     rls_state=None if final.rls is None else
-                     jax.tree_util.tree_map(np.asarray, final.rls))
+                     rls_state=rls_state,
+                     policy_state=vec)
 
 
 def sweep(profiles: Union[str, PlantProfile,
@@ -539,20 +622,29 @@ def sweep(profiles: Union[str, PlantProfile,
           dt: float = 1.0,
           tau_obj: float = 10.0,
           adaptive: Union[None, RLSConfig, Sequence[RLSConfig]] = None,
+          policies: Union[None, pol.Policy, Sequence[pol.Policy]] = None,
           collect_traces: bool = True,
           summary_warmup: int = 0) -> SweepResult:
-    """Vmapped closed-loop grid: profiles x epsilons [x rls-configs] x
+    """Vmapped closed-loop grid: profiles x epsilons [x policies] x
     seeds, one compile.
 
-    The compiled function is cached by scan length and mode only — plant,
-    gain AND estimator parameters are traced — so repeated sweeps over
-    different profiles, epsilon grids or RLS hyperparameter grids reuse
-    the same executable. Pass `adaptive=` a single RLSConfig (axis
-    squeezed) or a sequence (inserts an A axis between epsilons and
-    seeds) to gain-schedule every run; `collect_traces=False` switches to
-    the O(grid)-memory summary mode for very large grids.
-    `summary_warmup` excludes each run's first steps (the descent
-    transient) from the online summary reductions only."""
+    The compiled function is cached by scan length, mode and the POLICY
+    BRANCH SET only — plant, gain and policy hyperparameters are all
+    traced — so repeated sweeps over different profiles, epsilon grids,
+    RLS hyperparameter grids or policy weight sets reuse the same
+    executable; a heterogeneous ``policies=[PIPolicy(...),
+    OfflineRLPolicy(...), DutyCyclePolicy(...)]`` list runs through one
+    `lax.switch`-dispatched engine, one compile per scan-length bucket.
+
+    Pass `policies=` a single Policy (axis squeezed) or a sequence
+    (inserts an A axis between epsilons and seeds); `adaptive=` is sugar
+    for ``policies=[PIPolicy(adaptive=cfg) for cfg in ...]`` with the
+    same squeeze semantics (a profile-dependent policy's `values` are
+    built at the epsilon[0] design point — the PI-RLS values only use
+    the epsilon-independent k_i). `collect_traces=False` switches to the
+    O(grid)-memory summary mode for very large grids. `summary_warmup`
+    excludes each run's first steps (the descent transient) from the
+    online summary reductions only."""
     single = isinstance(profiles, (str, PlantProfile))
     profs = [_resolve(p) for p in ([profiles] if single else profiles)]
     eps = [float(e) for e in epsilons]
@@ -560,27 +652,40 @@ def sweep(profiles: Union[str, PlantProfile,
     if not (profs and eps and seeds):
         raise ValueError("sweep needs at least one profile, epsilon and "
                          "seed")
+    if adaptive is not None and policies is not None:
+        raise ValueError("pass policies= or adaptive=, not both "
+                         "(adaptive= is sugar for PIPolicy(adaptive=...))")
+    if policies is None:
+        if adaptive is None:
+            pls, squeeze_pol = [PIPolicy()], True
+        else:
+            single_cfg = isinstance(adaptive, RLSConfig)
+            cfgs = [adaptive] if single_cfg else list(adaptive)
+            if not cfgs:
+                raise ValueError("adaptive= needs at least one RLSConfig")
+            pls = [PIPolicy(adaptive=c) for c in cfgs]
+            squeeze_pol = single_cfg
+    else:
+        squeeze_pol = isinstance(policies, pol.Policy)
+        pls = [policies] if squeeze_pol else list(policies)
+        if not pls:
+            raise ValueError("policies= needs at least one Policy")
+    branches, kinds = pol.resolve_kinds(pls)
     pv = jnp.stack([profile_values(p) for p in profs])
     gv = jnp.stack([
         jnp.stack([gains_values(PIGains.from_model(p, e, tau_obj))
                    for e in eps]) for p in profs])
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-    single_cfg = isinstance(adaptive, RLSConfig)
-    rv = None
-    if adaptive is not None:
-        cfgs = [adaptive] if single_cfg else list(adaptive)
-        if not cfgs:
-            raise ValueError("adaptive= needs at least one RLSConfig")
-        # kl_ref/tau_obj depend only on the profile (k_i0 is epsilon-
-        # independent), so the traced grid is (P, A, 5)
-        rv = jnp.stack([
-            jnp.stack([rls_values(c, p,
-                                  PIGains.from_model(p, eps[0], tau_obj))
-                       for c in cfgs]) for p in profs])
+    # policy values grid (P, A, PARAM_DIM), built at the eps[0] design
+    # point per profile (cf. the adaptive grid: kl_ref/tau_obj depend
+    # only on the profile)
+    av = jnp.stack([
+        jnp.stack([pol.policy_values(
+            p_, p, PIGains.from_model(p, eps[0], tau_obj), kind=k)
+            for p_, k in zip(pls, kinds)]) for p in profs])
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
-    traces, final = _jit_sweep(max_steps, adaptive is not None,
-                               collect_traces)(
-        pv, gv, rv, jnp.float32(total_work), jnp.float32(max_time),
+    traces, final = _jit_sweep(max_steps, branches, collect_traces)(
+        pv, gv, av, jnp.float32(total_work), jnp.float32(max_time),
         jnp.float32(dt), jnp.float32(summary_warmup), keys)
     edges = {k: np.stack([_hist_edges(p)[k] for p in profs])
              for k in ("progress_edges", "pcap_edges")}
@@ -591,7 +696,7 @@ def sweep(profiles: Union[str, PlantProfile,
             lambda x: x[(slice(None),) * axis + (0,)]
             if hasattr(x, "ndim") and x.ndim > axis else x, tree)
 
-    if adaptive is not None and single_cfg:
+    if squeeze_pol:
         traces, final = squeeze(traces, 2), squeeze(final, 2)
         summary = {k: v if k.endswith("_edges") else squeeze(v, 2)
                    for k, v in summary.items()}

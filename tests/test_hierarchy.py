@@ -6,8 +6,10 @@ import numpy as np
 import pytest
 
 from repro.core.hierarchy import (FleetConfig, _simulate_fleet_reference,
-                                  _water_fill, simulate_fleet)
+                                  _water_fill, _water_fill_bounds,
+                                  simulate_fleet)
 from repro.core.plant import PROFILES
+from repro.core.policies import DutyCyclePolicy, PIPolicy
 
 
 def _peak(prof, n):
@@ -80,6 +82,128 @@ def test_fleet_budget_adherence():
     steady = np.asarray(tr["power"])[30:].mean()
     assert steady < 1.05 * budget
     assert steady > 0.5 * budget  # not collapsed to pcap_min either
+
+
+def test_water_fill_bounds_respects_per_node_ranges():
+    """Heterogeneous bounds: saturated nodes pin at THEIR cap and the
+    remainder flows to nodes with room (the cross-class shifting
+    primitive)."""
+    n = 16
+    lo = jnp.concatenate([jnp.full(n // 2, 40.0), jnp.full(n // 2, 90.0)])
+    hi = jnp.concatenate([jnp.full(n // 2, 120.0),
+                          jnp.full(n // 2, 250.0)])
+    budget = 0.7 * float(hi.sum())
+    alloc = np.asarray(_water_fill_bounds(lo, hi, budget, jnp.ones(n)))
+    assert alloc.sum() == pytest.approx(budget, rel=1e-4)
+    assert (alloc >= np.asarray(lo) - 1e-4).all()
+    assert (alloc <= np.asarray(hi) + 1e-4).all()
+    # equal weights but unequal ranges: the wide class absorbs more
+    assert alloc[n // 2:].mean() > alloc[: n // 2].mean()
+    # infeasible low budget saturates every node at its own lower bound
+    alloc = np.asarray(_water_fill_bounds(lo, hi, 0.5 * float(lo.sum()),
+                                          jnp.ones(n)))
+    np.testing.assert_allclose(alloc, np.asarray(lo), rtol=1e-5)
+
+
+@pytest.mark.parametrize("budgeted", [False, True])
+def test_heterogeneous_fleet_matches_reference_statistics(budgeted):
+    """Two plant-profile classes on the engine-backed fleet vs the
+    hand-rolled per-node reference: fleet AND per-class steady-state
+    statistics must agree within the plants' noise envelope."""
+    profs = [PROFILES["gros"], PROFILES["dahu"]]
+    n = 64
+    peak = sum(float(p.power_of_pcap(p.pcap_max)) for p in profs) * n / 2
+    fc = FleetConfig(n_nodes=n, epsilon=0.1,
+                     power_budget=0.6 * peak if budgeted else 0.0)
+    new = simulate_fleet(profs, fc, steps=80, seed=1)
+    ref = _simulate_fleet_reference(profs, fc, steps=80, seed=1)
+    for k in ("power", "progress_med", "pcap_mean"):
+        a = np.asarray(new[k])[30:].mean()
+        b = np.asarray(ref[k])[30:].mean()
+        assert a == pytest.approx(b, rel=0.08), k
+    for c in range(2):  # per-class power agrees too
+        a = np.asarray(new["power_class"])[30:, c].mean()
+        b = np.asarray(ref["power_class"])[30:, c].mean()
+        assert a == pytest.approx(b, rel=0.08), f"class {c}"
+    assert float(new["energy_total"]) == pytest.approx(
+        float(ref["energy_total"]), rel=0.08)
+
+
+def test_heterogeneous_fleet_budget_adherence_and_shifting():
+    """EcoShift scenario: under a tight global budget the fleet must (a)
+    adhere to the budget and (b) shift allocation toward the class whose
+    progress lags its setpoint — away from a naive proportional split."""
+    profs = [PROFILES["gros"], PROFILES["dahu"]]
+    n = 64
+    peak = sum(float(p.power_of_pcap(p.pcap_max)) for p in profs) * n / 2
+    budget = 0.55 * peak
+    fc = FleetConfig(n_nodes=n, epsilon=0.05, power_budget=budget,
+                     straggler_boost=2.0)
+    tr = simulate_fleet(profs, fc, steps=120, seed=2)
+    steady = np.asarray(tr["power"])[40:].mean()
+    assert steady < 1.05 * budget           # adheres from below
+    assert steady > 0.5 * budget            # not collapsed to pcap_min
+    # per-class steady-state: dahu (saturates later -> larger relative
+    # lag under equal caps) must receive MORE than the equal-count
+    # proportional share; per-class traces expose the shift
+    alloc = np.asarray(tr["alloc_class"])[40:].mean(0)  # per-node mean
+    assert alloc[1] > alloc[0] + 1.0
+    rel = np.asarray(tr["progress_class"])[40:].mean(0)
+    assert rel.shape == (2,)
+    assert (np.asarray(tr["class_counts"]) == 32).all()
+
+
+def test_heterogeneous_fleet_per_class_policies_run_and_adhere():
+    """Mixed control: PI on one class, duty-cycle on the other, under a
+    global budget — still one engine, still budget-adherent."""
+    profs = [PROFILES["gros"], PROFILES["dahu"]]
+    n = 32
+    peak = sum(float(p.power_of_pcap(p.pcap_max)) for p in profs) * n / 2
+    fc = FleetConfig(n_nodes=n, epsilon=0.1, power_budget=0.7 * peak)
+    tr = simulate_fleet(profs, fc, steps=80, seed=3,
+                        policies=[PIPolicy(), DutyCyclePolicy()])
+    steady = np.asarray(tr["power"])[30:].mean()
+    assert steady < 1.05 * (0.7 * peak)
+    assert np.asarray(tr["power_class"]).shape == (80, 2)
+    # per-node policy list works too and matches the per-class expansion
+    node_pols = [PIPolicy() if i % 2 == 0 else DutyCyclePolicy()
+                 for i in range(n)]
+    tr2 = simulate_fleet(profs, fc, steps=80, seed=3, policies=node_pols)
+    np.testing.assert_allclose(np.asarray(tr["power"]),
+                               np.asarray(tr2["power"]), rtol=1e-6)
+    with pytest.raises(ValueError):
+        simulate_fleet(profs, fc, steps=10,
+                       policies=[PIPolicy()] * 3)  # wrong length
+    with pytest.raises(ValueError):
+        simulate_fleet(profs, fc, steps=10,
+                       node_class=[0] * (n - 1) + [5])  # class out of range
+
+
+def test_fleet_policies_per_node_wins_when_ambiguous():
+    """Regression: with n_nodes == n_classes a policy list is ambiguous;
+    the per-node reading must win (policies[i] is node i), not get
+    permuted through node_class."""
+    from repro.core.hierarchy import _fleet_policies
+    a, b = PIPolicy(), DutyCyclePolicy()
+    out = _fleet_policies([a, b], n_profiles=2, n=2,
+                          cls=np.array([1, 0]))
+    assert out == [a, b]
+    # unambiguous per-class expansion still follows node_class
+    out = _fleet_policies([a, b], n_profiles=2, n=4,
+                          cls=np.array([1, 0, 1, 0]))
+    assert out == [b, a, b, a]
+
+
+def test_fleet_per_class_vectors_survive_short_horizons():
+    """Regression: the trace trim slices the TIME axis only — a 3-class
+    fleet run over 2 steps must still return all 3 classes' energy."""
+    profs = [PROFILES["gros"], PROFILES["dahu"], PROFILES["yeti"]]
+    fc = FleetConfig(n_nodes=6, epsilon=0.1)
+    tr = simulate_fleet(profs, fc, steps=2, seed=0,
+                        node_class=[0, 1, 2, 0, 1, 2])
+    assert np.asarray(tr["energy_class"]).shape == (3,)
+    assert np.asarray(tr["power_class"]).shape == (2, 3)
+    assert (np.asarray(tr["energy_class"]) > 0).all()
 
 
 def test_fleet_trace_length_and_horizon_freeze():

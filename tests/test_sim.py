@@ -225,6 +225,103 @@ def test_summary_mode_matches_trace_reductions():
         np.asarray(full.n_steps), rtol=1e-6)
 
 
+def test_hist_quantile_edge_cases():
+    edges = np.linspace(0.0, 10.0, 11, dtype=np.float32)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    # empty histogram -> NaN (not a silent first-bin answer)
+    assert np.isnan(hist_quantile(np.zeros(10), edges, 0.5))
+    # q=0 / q=1 land on the lowest / highest OCCUPIED bins
+    h = np.zeros(10)
+    h[3], h[7] = 2.0, 1.0
+    assert hist_quantile(h, edges, 0.0) == pytest.approx(centers[3])
+    assert hist_quantile(h, edges, 1.0) == pytest.approx(centers[7])
+    assert hist_quantile(h, edges, 0.5) == pytest.approx(centers[3])
+    # a single count answers its own bin for every q
+    h1 = np.zeros(10)
+    h1[5] = 1.0
+    for q in (0.0, 0.25, 0.5, 1.0):
+        assert hist_quantile(h1, edges, q) == pytest.approx(centers[5])
+    # batched: empty and occupied rows coexist
+    hb = np.stack([np.zeros(10), h1])
+    out = hist_quantile(hb, edges, 0.5)
+    assert np.isnan(out[0]) and out[1] == pytest.approx(centers[5])
+
+
+def test_single_live_step_summary_and_quantile():
+    """A run that completes in its first period: count==1, the histogram
+    holds exactly one sample and every quantile answers it."""
+    res = simulate_closed_loop("gros", 0.1, total_work=1e-6, seed=0)
+    assert res.n_steps == 1 and res.completed
+    assert res.summary["progress_hist"].sum() == pytest.approx(1.0)
+    med = hist_quantile(res.summary["progress_hist"],
+                        res.summary["progress_edges"], 0.5)
+    lo = hist_quantile(res.summary["progress_hist"],
+                       res.summary["progress_edges"], 0.0)
+    assert med == pytest.approx(lo)
+    assert res.summary["power_mean"] == pytest.approx(
+        float(res.traces["power"][0]), rel=1e-5)
+
+
+def test_resume_init_fresh_state_equals_default_run():
+    """Resuming from freshly-initialized plant/controller state must be
+    bit-for-bit the same run as starting from scratch."""
+    from repro.core import sim
+    from repro.core.controller import pi_init
+    from repro.core.plant import plant_init
+    from repro.core.sim import resume_init
+    p = PROFILES["gros"]
+    g = PIGains.from_model(p, 0.1)
+    # build the fresh states from the f32-packed values, exactly like
+    # the engine's internal default init does
+    p32 = sim._unpack_profile(sim.profile_values(p))
+    g32 = sim._unpack_gains(sim.gains_values(g))
+    init = resume_init(plant_init(p32), pi_init(g32), p.pcap_max)
+    a = simulate_closed_loop(p, gains=g, total_work=400.0, seed=4,
+                             init=init)
+    b = simulate_closed_loop(p, gains=g, total_work=400.0, seed=4)
+    assert a.n_steps == b.n_steps
+    for k in ("progress", "pcap", "energy"):
+        np.testing.assert_array_equal(a.traces[k], b.traces[k])
+
+
+def test_resume_init_policy_state_continues_non_pi_policy():
+    """resume_init(policy_state=...) continues a non-PI policy exactly
+    where SimResult.policy_state left it."""
+    from repro.core.policies import DutyCyclePolicy
+    from repro.core.sim import resume_init
+    p = PROFILES["gros"]
+    g = PIGains.from_model(p, 0.1)
+    dc = DutyCyclePolicy()
+    r1 = simulate_closed_loop(p, gains=g, total_work=300.0, seed=1,
+                              policy=dc)
+    init = resume_init(r1.plant_state, None, r1.pcap,
+                       policy_state=r1.policy_state)
+    r2 = simulate_closed_loop(p, gains=g, total_work=600.0, seed=2,
+                              policy=dc, init=init)
+    assert float(r2.traces["work"][0]) > 300.0
+    assert abs(float(r2.traces["dc_level"][0])
+               - float(r1.policy_state[0])) <= dc.up_step
+    # a PI resume carry with leftover RLS state still demands adaptive=
+    rls = simulate_closed_loop(p, gains=g, total_work=300.0, seed=1,
+                               adaptive=RLSConfig())
+    bad = resume_init(rls.plant_state,
+                      type(rls.pi_state)(*map(np.float32, rls.pi_state)),
+                      rls.pcap, rls=rls.rls_state)
+    with pytest.raises(ValueError):
+        simulate_closed_loop(p, gains=g, total_work=100.0, init=bad)
+    # cross-branch resume is rejected: a duty-cycle state vector must
+    # not be silently misread as PI slots (branch tag check)
+    with pytest.raises(ValueError, match="branch"):
+        simulate_closed_loop(p, gains=g, total_work=100.0, init=init)
+    # ... while the pi -> adaptive-pi upgrade stays allowed
+    from repro.core.controller import pi_init
+    from repro.core.plant import plant_init
+    up = resume_init(plant_init(p), pi_init(g), p.pcap_max)
+    ok = simulate_closed_loop(p, gains=g, total_work=100.0, init=up,
+                              adaptive=RLSConfig())
+    assert ok.rls_state is not None
+
+
 def test_replay_model_matches_reference_loop():
     p = PROFILES["dahu"]
     sched = np.concatenate([np.full(20, 60.0), np.full(20, 110.0)])
