@@ -51,6 +51,7 @@ def run(quick: bool = True):
     assert bool(np.asarray(res.completed).all())
     exec_time = np.asarray(res.exec_time)
     energy = np.asarray(res.energy)
+    work = np.asarray(res.work)
     mean_prog = np.asarray(res.summary["progress_mean"])
     mean_power = np.asarray(res.summary["power_mean"])
     for pi, name in enumerate(names):
@@ -58,11 +59,13 @@ def run(quick: bool = True):
         runs, pts = [], []
         for ei, eps in enumerate(eps_grid):
             for si in range(reps):
+                e, w = float(energy[pi, ei, si]), float(work[pi, ei, si])
                 runs.append(RunSummary(
                     epsilon=eps, exec_time=float(exec_time[pi, ei, si]),
-                    energy=float(energy[pi, ei, si]),
+                    energy=e,
                     mean_progress=float(mean_prog[pi, ei, si]),
-                    mean_power=float(mean_power[pi, ei, si])))
+                    mean_power=float(mean_power[pi, ei, si]),
+                    joules_per_work=e / w))
                 pts.append((runs[-1].exec_time, runs[-1].energy))
         table = tradeoff_table(runs)
         front = pareto_front(pts)
@@ -75,7 +78,8 @@ def run(quick: bool = True):
             f"time_increase={slow_vs_max:.1%};"
             f"eps0.1_vs_eps0ctrl:energy_saving="
             f"{t10.get('energy_saving', 0):.1%},"
-            f"time_increase={t10.get('time_increase', 0):.1%};"
+            f"time_increase={t10.get('time_increase', 0):.1%},"
+            f"efficiency_gain={t10.get('efficiency_gain', 0):.1%};"
             f"front_size={len(front)}"))
         # trade-off direction must hold
         eps_keys = sorted(table)

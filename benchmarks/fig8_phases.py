@@ -1,0 +1,125 @@
+"""Fig. 8 (beyond-paper): every power policy raced on PHASED workloads.
+
+The paper's motivating scenario — "applications dynamically undergo
+variations in workload, due to phases or data/compute movement between
+devices" — finally stresses the controllers: a 3-phase STREAM -> DGEMM
+-> STREAM schedule (repro.core.workloads) swings each plant between a
+deep-knee memory-bound regime (lots of energy headroom) and a
+near-linear compute-bound one (almost none), with the compute phase also
+2x faster in absolute rate. The schedule is expressed as per-phase
+FIELD SCALES, so one `PhaseSchedule` resolves against every profile on
+the sweep's profile axis.
+
+Arms, all in ONE heterogeneous-policy sweep (summary mode) per detector
+setting:
+
+* fixed-gain PI (the paper's Eq. 4, designed for the static plant),
+* adaptive PI (RLS gain scheduling) — without and WITH the online
+  change-point detector (CUSUM/Page-Hinkley) that resets the RLS
+  covariance at detected phase boundaries,
+* fitted-Q offline-RL (trained on static-plant traces — distribution
+  shift on purpose) and the DDCM-style duty-cycle ladder.
+
+Reported per (profile, policy): energy, J/work efficiency and setpoint
+tracking, plus detector recovery stats (alarms per run vs scripted
+boundaries). Appended to BENCH_sim.json via `telemetry.append_entry` so
+the phased-scenario trajectory accumulates across PRs.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+
+PROFS = ("gros", "dahu")
+EPS = 0.10
+DWELL = 250.0
+TOTAL_WORK = 1e12  # never completes: fixed-horizon comparison
+MAX_TIME = 750.0   # exactly the 3 phases
+
+# knee_for_saturation(sat=3) / (sat=0.3) as field scales; the DGEMM
+# phase is also 2x faster in absolute rate
+STREAM = {"alpha": 3.0, "beta": 0.6}
+DGEMM = {"alpha": 0.3, "beta": 1.14, "K_L": 2.0}
+
+
+def run(quick: bool = True) -> List[Row]:
+    import jax
+
+    from benchmarks import telemetry
+    from repro.core.adaptive import RLSConfig
+    from repro.core.plant import PROFILES
+    from repro.core.policies import (DutyCyclePolicy, PIPolicy,
+                                     build_dataset, fit_offline_rl)
+    from repro.core.sim import hist_quantile, sweep
+    from repro.core.workloads import (DetectorConfig, Phase,
+                                      PhaseSchedule)
+
+    rows: list[Row] = []
+    seeds = range(4 if quick else 20)
+
+    # offline-RL trained on the STATIC plant (distribution shift is the
+    # point: phased deployment punishes memorized static behaviour)
+    har = sweep(PROFS, [EPS], range(2), total_work=2000.0,
+                max_time=1024.0)
+    parts = [build_dataset(
+        {k: np.asarray(v)[i] for k, v in har.traces.items()},
+        PROFILES[p], EPS) for i, p in enumerate(PROFS)]
+    dataset = {k: np.concatenate([d[k] for d in parts]) for k in parts[0]}
+    rl = fit_offline_rl(dataset, n_iters=30 if quick else 100)
+
+    policies = [PIPolicy(), PIPolicy(adaptive=RLSConfig()), rl,
+                DutyCyclePolicy()]
+    names = ("pi", "pi_rls", "offline_rl", "dutycycle")
+    sched = PhaseSchedule((Phase(DWELL, scale=STREAM),
+                           Phase(DWELL, scale=DGEMM),
+                           Phase(DWELL, scale=STREAM)),
+                          name="stream-dgemm-x3")
+    boundaries = sched.boundaries()
+
+    entry = {"epsilon": EPS, "dwell_s": DWELL,
+             "boundaries": boundaries.tolist(), "seconds": {},
+             "per_policy": {}}
+    for det_name, det in (("no_detector", None),
+                          ("detector", DetectorConfig())):
+        t0 = time.time()
+        res = sweep(PROFS, [EPS], seeds, total_work=TOTAL_WORK,
+                    max_time=MAX_TIME, policies=policies,
+                    workloads=sched, collect_traces=False,
+                    summary_warmup=30, detector=det)
+        jax.block_until_ready(res.exec_time)
+        race_s = time.time() - t0
+        # shapes: (P, E=1, A, S) — the single workload axis is squeezed
+        for a, pname in enumerate(names):
+            per_prof = {}
+            for p, prof in enumerate(PROFS):
+                setpoint = (1.0 - EPS) * PROFILES[prof].progress_max
+                med = hist_quantile(
+                    res.summary["progress_hist"][p, 0, a],
+                    res.summary["progress_edges"][p], 0.5)
+                energy = float(np.asarray(res.energy[p, 0, a]).mean())
+                work = float(np.asarray(res.work[p, 0, a]).mean())
+                stats = {
+                    "energy_mean": energy,
+                    "joules_per_work": energy / max(work, 1e-9),
+                    "progress_med_rel": float(np.median(med) / setpoint),
+                }
+                if res.detections is not None:
+                    stats["alarms_mean"] = float(np.asarray(
+                        res.detections[p, 0, a]).mean())
+                per_prof[prof] = stats
+                rows.append((
+                    f"fig8/{det_name}/{pname}/{prof}", race_s * 1e6,
+                    f"J/work={stats['joules_per_work']:.2f};"
+                    f"prog/set={stats['progress_med_rel']:.3f};"
+                    f"alarms={stats.get('alarms_mean', 0):.1f}"
+                    f"/{len(boundaries)}"))
+            entry["per_policy"].setdefault(det_name, {})[pname] = per_prof
+        entry["seconds"][det_name] = round(race_s, 3)
+
+    telemetry.append_entry("fig8_phases", entry)
+    rows.append(("fig8/written", 0.0, str(telemetry.BENCH_PATH)))
+    return rows

@@ -19,19 +19,24 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true",
                    help="paper-scale repetition counts (slower)")
+    p.add_argument("--quick", action="store_true",
+                   help="explicit quick mode (the default; what CI runs)")
     p.add_argument("--only", default=None)
     args = p.parse_args()
+    if args.full and args.quick:
+        p.error("--full and --quick are mutually exclusive")
 
     from benchmarks import (beyond_adaptive, fig3_system_analysis,
                             fig4_static, fig5_dynamics, fig6_control,
-                            fig7_pareto, policy_faceoff, roofline,
-                            telemetry)
+                            fig7_pareto, fig8_phases, policy_faceoff,
+                            roofline, telemetry)
     modules = {
         "fig3": fig3_system_analysis,
         "fig4": fig4_static,
         "fig5": fig5_dynamics,
         "fig6": fig6_control,
         "fig7": fig7_pareto,
+        "fig8": fig8_phases,
         "beyond": beyond_adaptive,
         "faceoff": policy_faceoff,
         "roofline": roofline,

@@ -105,16 +105,43 @@ def append_entry(name: str, payload: dict) -> None:
 
 
 _OWNED_PREFIXES = ("fig7_sweep", "adaptive_grid", "fleet_")
+_HISTORY_CAP = 50
+
+
+def _git_rev() -> str:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=BENCH_PATH.parent).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
 
 
 def run(quick: bool = True):
+    import datetime
+
     data = collect(quick)
     fresh = data["entries"]
     # keep entries appended by OTHER modules; prune stale/renamed
     # telemetry-owned names so the record stays a snapshot of this run
-    prev = {k: v for k, v in _read_bench().get("entries", {}).items()
+    prev_data = _read_bench()
+    prev = {k: v for k, v in prev_data.get("entries", {}).items()
             if not k.startswith(_OWNED_PREFIXES)}
     data["entries"] = {**prev, **fresh}
+    # the trajectory: one compact row per benchmark run (warm seconds of
+    # every timed entry), keyed by commit — this is what accumulates
+    # across PRs instead of being clobbered by each snapshot
+    history = list(prev_data.get("history", []))
+    history.append({
+        "rev": _git_rev(),
+        "date": datetime.datetime.now(datetime.timezone.utc)
+        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "quick": quick,
+        "warm_s": {k: v["warm_s"] for k, v in fresh.items()},
+    })
+    data["history"] = history[-_HISTORY_CAP:]
     BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
     rows: list[Row] = []
     for name, e in fresh.items():

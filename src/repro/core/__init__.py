@@ -10,3 +10,6 @@ from repro.core.plant import (PROFILES, PlantProfile, PlantState,  # noqa: F401
 from repro.core.signals import HeartbeatAggregator, progress_from_times  # noqa: F401
 from repro.core.sim import (SimResult, SweepResult, replay_model,  # noqa: F401
                             simulate_closed_loop, sweep)
+from repro.core.workloads import (DetectorConfig, Phase, PhaseSchedule,  # noqa: F401
+                                  markov_schedule, roofline_schedule,
+                                  stream_dgemm_schedule)

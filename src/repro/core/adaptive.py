@@ -170,6 +170,15 @@ class RLSAdapter:
         self.tau_hat = self.profile.tau
         self.kl_hat = self.profile.K_L
 
+    def on_change(self) -> None:
+        """Phase-change reaction (mirrors the engine-side pi_rls
+        `on_change` hook): the identified model is stale, so blow the
+        covariance back to its fresh-init value, drop the old-phase
+        regressor, and re-place the gains at the very next update."""
+        self.P = np.eye(2) * 1e2
+        self._prev = None
+        self._since_update = self.dwell
+
     def update(self, gains: PIGains, progress: float, pcap_l: float,
                dt: float) -> PIGains:
         y = progress - self.profile.K_L  # progress_L

@@ -47,6 +47,7 @@ from repro.core import sim
 from repro.core.controller import PIGains, pi_init, pi_step
 from repro.core.plant import PlantProfile, plant_step
 from repro.core.policies.pi import PIPolicy
+from repro.core.workloads.schedule import Phase, PhaseSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,8 +110,8 @@ def _jit_fleet(n: int, scan_len: int, budgeted: bool,
     budgeted, policy branch set, class count) — every scalar parameter,
     per-node plant/gain row and policy value is traced."""
 
-    def run(profile_vals, gains_vals, policy_vals, class_ids, budget,
-            realloc_every, boost, steps, dt, key):
+    def run(profile_vals, gains_vals, policy_vals, class_ids, sched,
+            budget, realloc_every, boost, steps, dt, key):
         max_time = steps * dt  # freeze (engine early-exit) past the horizon
         total_work = jnp.float32(jnp.inf)
         lo = profile_vals[:, _F_PCAP_MIN]
@@ -120,24 +121,31 @@ def _jit_fleet(n: int, scan_len: int, budgeted: bool,
                                             num_segments=n_classes)
         counts = jnp.maximum(seg(jnp.ones((n,))), 1.0)
 
-        nodes0 = jax.vmap(
-            lambda pv, gv, av: sim._default_init(
-                sim._unpack_profile(pv), sim._unpack_gains(gv),
-                branches, av))(profile_vals, gains_vals, policy_vals)
-        if budgeted:
-            v_step = jax.vmap(
-                lambda pv, gv, av, c, k, lim: sim.engine_step(
-                    sim._unpack_profile(pv), sim._unpack_gains(gv), c,
-                    total_work, max_time, dt, k, policy=branches,
-                    policy_vals=av, cap_limit=lim),
-                in_axes=(0, 0, 0, 0, 0, 0))
+        # sched is None (static plants) or a per-node ScheduleValues
+        # pytree with leading (n,) leaves; jit separates the variants by
+        # structure, so schedule-free fleets keep the pre-phases graph
+        if sched is None:
+            nodes0 = jax.vmap(
+                lambda pv, gv, av: sim._default_init(
+                    sim._unpack_profile(pv), sim._unpack_gains(gv),
+                    branches, av))(profile_vals, gains_vals, policy_vals)
         else:
-            v_step = jax.vmap(
-                lambda pv, gv, av, c, k: sim.engine_step(
-                    sim._unpack_profile(pv), sim._unpack_gains(gv), c,
-                    total_work, max_time, dt, k, policy=branches,
-                    policy_vals=av),
-                in_axes=(0, 0, 0, 0, 0))
+            nodes0 = jax.vmap(
+                lambda pv, gv, av, sv: sim._default_init(
+                    sim._unpack_profile(pv), sim._unpack_gains(gv),
+                    branches, av, schedule=sv))(
+                profile_vals, gains_vals, policy_vals, sched)
+
+        def node_step(pv, gv, av, sv, c, k, lim):
+            return sim.engine_step(
+                sim._unpack_profile(pv), sim._unpack_gains(gv), c,
+                total_work, max_time, dt, k, policy=branches,
+                policy_vals=av, cap_limit=lim, schedule=sv)
+
+        v_step = jax.vmap(node_step,
+                          in_axes=(0, 0, 0,
+                                   None if sched is None else 0, 0, 0,
+                                   0 if budgeted else None))
 
         def step(carry, xs):
             nodes, alloc, prev_prog = carry
@@ -157,11 +165,9 @@ def _jit_fleet(n: int, scan_len: int, budgeted: bool,
 
                 alloc = jax.lax.cond(t % realloc_every == 0, reallocate,
                                      lambda _: alloc, None)
-                nodes, out = v_step(profile_vals, gains_vals, policy_vals,
-                                    nodes, jax.random.split(k, n), alloc)
-            else:
-                nodes, out = v_step(profile_vals, gains_vals, policy_vals,
-                                    nodes, jax.random.split(k, n))
+            nodes, out = v_step(profile_vals, gains_vals, policy_vals,
+                                sched, nodes, jax.random.split(k, n),
+                                alloc if budgeted else None)
 
             row = {"progress_mean": out["progress"].mean(),
                    "progress_med": jnp.median(out["progress"]),
@@ -172,6 +178,11 @@ def _jit_fleet(n: int, scan_len: int, budgeted: bool,
                    "pcap_class": seg(out["pcap"]) / counts}
             if budgeted:
                 row["alloc_class"] = seg(alloc) / counts
+            if sched is not None:
+                # mean active phase per class: phase-staggered fleets
+                # make the cross-class movement observable
+                row["phase_class"] = seg(out["phase"].astype(jnp.float32)
+                                         ) / counts
             return (nodes, alloc, out["progress"]), row
 
         keys = jax.random.split(key, scan_len)
@@ -220,20 +231,55 @@ def _fleet_policies(policies, n_profiles: int, n: int, cls):
                      f"(per class) or {n} (per node); got {len(pls)}")
 
 
+def _fleet_schedules(schedules, profs, n: int, cls):
+    """Normalize schedules= to a per-node ScheduleValues pytree with
+    leading (n,) leaves, or None. Accepts a single PhaseSchedule (every
+    node, resolved against its class profile), one per class, or one per
+    node — same precedence rules as policies= (per-node reading wins
+    when n_nodes == n_classes). None entries mean 'static plant' and
+    become a one-phase hold of the node's class profile."""
+    if schedules is None:
+        return None
+    if isinstance(schedules, PhaseSchedule):
+        per_node = [schedules] * n
+    else:
+        scheds = list(schedules)
+        if len(scheds) == n:
+            per_node = scheds
+        elif len(scheds) == len(profs):
+            per_node = [scheds[c] for c in cls]
+        else:
+            raise ValueError(f"schedules= must be one PhaseSchedule, "
+                             f"{len(profs)} (per class) or {n} (per "
+                             f"node); got {len(scheds)}")
+    static_hold = PhaseSchedule((Phase(1.0),))  # holds base forever
+    resolved = [(s or static_hold).resolve(profs[cls[i]])
+                for i, s in enumerate(per_node)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *resolved)
+
+
 def simulate_fleet(profile, fc: FleetConfig, steps: int, seed: int = 0, *,
                    node_class: Optional[Sequence[int]] = None,
                    policies: Union[None, pol.Policy,
-                                   Sequence[pol.Policy]] = None) -> dict:
+                                   Sequence[pol.Policy]] = None,
+                   schedules: Union[None, PhaseSchedule,
+                                    Sequence[Optional[PhaseSchedule]]]
+                   = None) -> dict:
     """Run the two-level controller over a (possibly heterogeneous) fleet.
 
     ``profile`` is a single PlantProfile or a sequence of profile CLASSES
     with ``node_class`` mapping each node to its class (default:
     round-robin). ``policies`` assigns the per-node control policy —
-    a single Policy, one per class, or one per node. Returns traces
-    aggregated per step: fleet progress mean/median, power, caps, plus
-    per-class power/progress/cap (and allocation, when budgeted) so
-    cross-class budget shifting is observable; ``class_counts`` gives the
-    node count per class."""
+    a single Policy, one per class, or one per node. ``schedules``
+    scripts per-node TIME-VARYING plants (`repro.core.workloads`): a
+    single PhaseSchedule, one per class, or one per node (None entries =
+    static), each resolved against the node's class profile — so
+    phase-staggered fleets exercise cross-class budget shifting when one
+    class goes compute-bound while another idles at its knee. Returns
+    traces aggregated per step: fleet progress mean/median, power, caps,
+    plus per-class power/progress/cap (and allocation, when budgeted;
+    mean active phase, when scheduled) so cross-class budget shifting is
+    observable; ``class_counts`` gives the node count per class."""
     profs, cls = _fleet_layout(profile, fc, node_class)
     n = fc.n_nodes
     gains = [PIGains.from_model(p, fc.epsilon, fc.tau_obj) for p in profs]
@@ -250,12 +296,13 @@ def simulate_fleet(profile, fc: FleetConfig, steps: int, seed: int = 0, *,
             cache[ck] = np.asarray(pol.policy_values(
                 p_, profs[cls[i]], gains[cls[i]], kind=k_))
         av[i] = cache[ck]
+    sv = _fleet_schedules(schedules, profs, n, cls)
 
     scan_len = sim._bucket_steps(steps)
     traces = _jit_fleet(n, scan_len, fc.power_budget > 0, branches,
                         len(profs))(
         jnp.asarray(pv), jnp.asarray(gv), jnp.asarray(av),
-        jnp.asarray(cls, jnp.int32), jnp.float32(fc.power_budget),
+        jnp.asarray(cls, jnp.int32), sv, jnp.float32(fc.power_budget),
         jnp.int32(fc.reallocate_every), jnp.float32(fc.straggler_boost),
         jnp.float32(steps), jnp.float32(fc.dt), jax.random.PRNGKey(seed))
     # trim only the TIME axis: per-step traces are (scan_len, ...);

@@ -9,12 +9,17 @@ in-process so the controller runs inside the training loop:
 * actuators — `PowerActuator` interface; `SimulatedPowerActuator` drives a
   `repro.core.plant` plant; on real hardware this class binds to the
   platform power interface (RAPL msr / TPU host power knob).
-* the loop  — `NRM.control_step()` aggregates progress (Eq. 1), runs the PI
-  controller (Eq. 4) and actuates; `NRM.run()` drives a full simulated
-  execution (used by the paper-reproduction benchmarks).
+* the loop  — `NRM.control_step()` aggregates progress (Eq. 1), dispatches
+  the configured power policy (Eq. 4 PI by default, ANY
+  `repro.core.policies` policy via the `policy_values/policy_init/
+  policy_step` contract) and actuates; with `detector=DetectorConfig()`
+  the online change-point detector (`repro.core.workloads.detect`) runs
+  live in the loop, resetting the RLS estimator / firing the policy's
+  `on_change` hook when the workload changes phase.
 
-Controller state is part of the run state and is checkpointed with the run
-(see repro.checkpoint), so power control survives restarts.
+Controller, estimator, policy and detector state are part of the run
+state and are checkpointed with the run (see repro.checkpoint), so power
+control survives restarts.
 """
 from __future__ import annotations
 
@@ -29,6 +34,8 @@ from repro.configs.base import PowerControlConfig
 from repro.core.controller import PIController, PIGains, PIState
 from repro.core.plant import PROFILES, PlantProfile, plant_init, plant_step
 from repro.core.signals import HeartbeatAggregator
+from repro.core.workloads.detect import (DetectorConfig, detect_init,
+                                         detect_step, detector_values)
 
 
 class PowerActuator:
@@ -74,6 +81,7 @@ class ControlRecord:
     pcap: float
     power: float
     setpoint: float
+    phase_change: bool = False  # the live detector alarmed this period
 
 
 class NRM:
@@ -82,7 +90,8 @@ class NRM:
     def __init__(self, pc_cfg: PowerControlConfig,
                  actuator: Optional[PowerActuator] = None,
                  profile: Optional[PlantProfile] = None,
-                 policy=None):
+                 policy=None,
+                 detector: Optional[DetectorConfig] = None):
         self.cfg = pc_cfg
         self.profile = profile or PROFILES[pc_cfg.plant_profile]
         self.actuator = actuator or SimulatedPowerActuator(self.profile)
@@ -98,6 +107,18 @@ class NRM:
         # threaded across run_simulated calls like the RLS estimator's
         self._policy = policy
         self._policy_state = None
+        # online change-point detector (repro.core.workloads.detect):
+        # runs live inside control_step AND inside run_simulated's scan,
+        # with its packed state threaded across both paths
+        self._detector = detector
+        self._det_state = None
+        # packed detector/policy parameter vectors are pure functions of
+        # (config, profile, gains): cached here, rebuilt on calibrate()
+        self._det_vals = None
+        self._policy_vals = None
+        # last cap COMMAND actually applied to the actuator (the
+        # detector's model replays it through the design transform)
+        self._pcap_applied = float(self.profile.pcap_max)
         if policy is not None and pc_cfg.adaptive:
             raise ValueError("policy= replaces the PI controller; "
                              "adaptive RLS only schedules PI gains")
@@ -125,16 +146,39 @@ class NRM:
         self.gains = PIGains.from_model(self.profile, self.cfg.epsilon,
                                         self.cfg.tau_obj)
         self.controller = PIController(self.gains)
+        # the detector replays the (re-scaled) design model; stale state
+        # (and cached parameter packs) would alarm on the calibration
+        # jump itself
+        self._det_state = None
+        self._det_vals = None
+        self._policy_vals = None
 
     # ---- control loop -----------------------------------------------------
+    def _detect(self, progress: float, dt: float) -> bool:
+        """One live detector period (no-op without detector=). The model
+        replays the cap that was APPLIED over the window just measured."""
+        if self._detector is None:
+            return False
+        if self._det_vals is None:
+            self._det_vals = detector_values(self._detector, self.profile)
+        if self._det_state is None:
+            self._det_state = detect_init(self._det_vals, self.gains,
+                                          self._pcap_applied)
+        self._det_state, det = detect_step(
+            self._det_vals, self._det_state, jnp.float32(progress),
+            self.gains.linearize(self._pcap_applied), jnp.float32(dt))
+        return bool(det)
+
     def control_step(self, dt: Optional[float] = None,
                      now: Optional[float] = None) -> ControlRecord:
-        """One PI period. Pass ``now`` when an external clock (the training
-        loop's simulated time) drives the schedule; dt is then derived."""
-        if self._policy is not None:
-            raise NotImplementedError(
-                "the runtime control_step drives the PI controller; "
-                "non-PI policies run via run_simulated")
+        """One control period, dispatched through the policy contract
+        (`policy_values/policy_init/policy_step`) for NRM(policy=...) and
+        through the stateful PI/RLS path otherwise. Pass ``now`` when an
+        external clock (the training loop's simulated time) drives the
+        schedule; dt is then derived. With detector=DetectorConfig() the
+        change-point detector runs first each period: an alarm resets
+        the RLS estimator (both paths) / fires the policy's `on_change`
+        hook, and is recorded on the ControlRecord."""
         if now is not None:
             if dt is None:
                 dt = max(now - self._t, 1e-6)
@@ -143,15 +187,47 @@ class NRM:
             dt = dt or self.cfg.sampling_period
             self._t += dt
         progress = self.hb.progress(self._t)
-        if self._adaptive is not None:
-            self.controller.gains = self._adaptive.update(
-                self.controller.gains, progress,
-                float(self.controller.state.prev_pcap_l), dt)
-        pcap = self.controller.step(progress, dt)
+        detected = self._detect(progress, dt)
+        if self._policy is not None:
+            from repro.core import policies as pol
+            if self._policy_vals is None:
+                self._policy_vals = pol.policy_values(
+                    self._policy, self.profile, self.gains)
+            vals = self._policy_vals
+            if self._policy_state is None:
+                self._policy_state = pol.policy_init(self._policy, vals,
+                                                     self.gains)
+            state = self._policy_state
+            if detected:
+                state = pol.branch_on_change(self._policy)(vals, state)
+            power = self.actuator.read_power()
+            if not np.isfinite(power):
+                # first period: no measurement yet; the policies that
+                # read obs.power get the model's estimate instead
+                power = float(self.profile.power_of_pcap(
+                    self._pcap_applied))
+            obs = pol.PolicyObs(progress=jnp.float32(progress),
+                                power=jnp.float32(power),
+                                dt=jnp.float32(dt), gains=self.gains,
+                                phase_change=jnp.float32(detected))
+            self._policy_state, pcap = pol.policy_step(
+                self._policy, vals, state, obs)
+            pcap = float(pcap)
+        else:
+            if detected and self._adaptive is not None:
+                self._adaptive.on_change()
+            if self._adaptive is not None:
+                self.controller.gains = self._adaptive.update(
+                    self.controller.gains, progress,
+                    float(self.controller.state.prev_pcap_l), dt)
+            pcap = self.controller.step(progress, dt)
         self.actuator.set_pcap(pcap)
+        self._pcap_applied = float(np.clip(pcap, self.profile.pcap_min,
+                                           self.profile.pcap_max))
         rec = ControlRecord(t=self._t, progress=progress, pcap=pcap,
                             power=self.actuator.read_power(),
-                            setpoint=float(self.gains.setpoint))
+                            setpoint=float(self.gains.setpoint),
+                            phase_change=detected)
         self.records.append(rec)
         return rec
 
@@ -196,10 +272,13 @@ class NRM:
                 rls = rls_init(
                     rls_values(self._rls_cfg, self.profile, self.gains),
                     self.gains.k_p, self.gains.k_i)
+        if self._detector is not None:
+            kwargs["detector"] = self._detector
         init = sim.resume_init(self.actuator.state,
                                self.controller.state,
                                self.actuator._pcap, rls=rls,
-                               policy_state=policy_state)
+                               policy_state=policy_state,
+                               det_state=self._det_state)
         # derive the engine's key from the actuator RNG (advanced after
         # every run) so a resumed segment at the same seed does not
         # replay the previous segment's noise stream
@@ -217,9 +296,13 @@ class NRM:
             # round-trip the packed policy state exactly like the RLS
             # estimator's: the next call resumes, not restarts
             self._policy_state = jnp.asarray(res.policy_state)
+        if res.detector_state is not None:
+            # detector continues live (control_step) where the scan ended
+            self._det_state = jnp.asarray(res.detector_state)
         self.actuator.state = jax.tree_util.tree_map(
             jnp.asarray, res.plant_state)
         self.actuator._pcap = res.pcap
+        self._pcap_applied = float(res.pcap)
         if res.n_steps:
             self.actuator._last_meas = {
                 "power": float(res.traces["power"][-1]),
@@ -301,6 +384,10 @@ class NRM:
             from repro.core.adaptive import rls_pack
             d["rls_state"] = np.asarray(rls_pack(self._rls_state),
                                         np.float32).tolist()
+        if self._det_state is not None:
+            d["det_state"] = np.asarray(self._det_state,
+                                        np.float32).tolist()
+        d["pcap_applied"] = self._pcap_applied
         return d
 
     def load_state_dict(self, d: dict) -> None:
@@ -320,6 +407,15 @@ class NRM:
                              "policy before loading")
         self._policy_state = (None if ps is None
                               else jnp.asarray(ps, jnp.float32))
+        ds = d.get("det_state")
+        if ds is not None and self._detector is None:
+            raise ValueError("checkpoint carries change-point detector "
+                             "state but this NRM has no detector=; "
+                             "configure a DetectorConfig before loading")
+        self._det_state = (None if ds is None
+                           else jnp.asarray(ds, jnp.float32))
+        self._pcap_applied = float(d.get("pcap_applied",
+                                         self.profile.pcap_max))
         rs = d.get("rls_state")
         if rs is not None and self._adaptive is None:
             raise ValueError("checkpoint carries RLS estimator state but "

@@ -44,21 +44,23 @@ def saturation_ratio(terms: Dict[str, float]) -> float:
     return nc / max(terms["compute_s"], 1e-12)
 
 
+def knee_for_saturation(profile: PlantProfile, sat: float) -> PlantProfile:
+    """Plant variant whose knee (alpha, beta) encodes a saturation ratio.
+
+    Memory-bound (sat >> 1, the STREAM regime) saturates at lower power
+    (beta down, alpha up): progress stops responding to power earlier —
+    more energy to harvest. Compute-bound (sat << 1, DGEMM) gets a
+    shallow knee: progress ~ linear in power, little headroom. sat is
+    clamped to [0.3, 3]; the same mapping seeds roofline cells
+    (`profile_for_cell`) and phase-schedule generators
+    (`repro.core.workloads.schedule`)."""
+    s = max(0.3, min(3.0, sat))
+    return dataclasses.replace(profile, name=f"{profile.name}-sat{s:.2f}",
+                               alpha=profile.alpha * s,
+                               beta=profile.beta * (1.2 - 0.2 * s))
+
+
 def profile_for_cell(terms: Dict[str, float],
                      base: str = "v5e-chip") -> PlantProfile:
-    """Plant profile whose knee encodes the cell's boundedness.
-
-    Memory-bound cells saturate at lower power (beta down, alpha up):
-    progress stops responding to power earlier — more energy to harvest.
-    Compute-bound cells get a shallow knee: progress ~ linear in power.
-    """
-    p = PROFILES[base]
-    sat = saturation_ratio(terms)
-    # sat >> 1: strongly non-compute-bound. Map sat in [0.3, 3] onto the
-    # knee: alpha scales up with sat, beta slides down.
-    import math
-    s = max(0.3, min(3.0, sat))
-    alpha = p.alpha * s
-    beta = p.beta * (1.2 - 0.2 * s)
-    return dataclasses.replace(p, name=f"{p.name}-sat{s:.2f}",
-                               alpha=alpha, beta=beta)
+    """Plant profile whose knee encodes the cell's boundedness."""
+    return knee_for_saturation(PROFILES[base], saturation_ratio(terms))

@@ -27,6 +27,15 @@ import jax
 import jax.numpy as jnp
 
 
+# Canonical packing order for traced plant parameters. Owned here (the
+# module that defines the fields) and shared by repro.core.sim's packed
+# engine arguments and repro.core.workloads' phase-schedule rows, so a
+# packed row means the same thing everywhere.
+PROFILE_FIELDS = ("a", "b", "alpha", "beta", "K_L", "tau", "pcap_min",
+                  "pcap_max", "n_sockets", "noise_scale", "power_noise",
+                  "drop_prob", "drop_exit_prob", "drop_level")
+
+
 @dataclasses.dataclass(frozen=True)
 class PlantProfile:
     name: str

@@ -7,7 +7,8 @@ from repro.core.policies.base import (BRANCH_TAG_SLOT, BRANCHES,
                                       POLICY_PARAM_DIM, POLICY_STATE_DIM,
                                       Branch, Policy, PolicyObs,
                                       as_branches, branch_extras,
-                                      branch_init, branch_step, branch_tag,
+                                      branch_init, branch_on_change,
+                                      branch_step, branch_tag,
                                       pack_values, policy_init,
                                       policy_step, policy_values,
                                       register_branch, resolve_kinds,
@@ -21,7 +22,8 @@ from repro.core.policies.pi import PIPolicy
 __all__ = [
     "BRANCHES", "Branch", "Policy", "PolicyObs", "POLICY_PARAM_DIM",
     "POLICY_STATE_DIM", "PIPolicy", "OfflineRLPolicy", "DutyCyclePolicy",
-    "as_branches", "branch_extras", "branch_init", "branch_step",
+    "as_branches", "branch_extras", "branch_init", "branch_on_change",
+    "branch_step",
     "build_dataset", "features", "fit_offline_rl", "pack_values",
     "policy_init", "policy_step", "policy_values", "register_branch",
     "resolve_kinds", "N_ACTIONS", "N_FEATURES", "BRANCH_TAG_SLOT",

@@ -70,27 +70,38 @@ class PolicyObs(NamedTuple):
     power: jnp.ndarray     # measured power this period [W]
     dt: jnp.ndarray        # control period [s]
     gains: PIGains
+    # 1.0 on periods where the engine's change-point detector fired
+    # (repro.core.workloads.detect); 0.0 otherwise / detector off
+    phase_change: Union[jnp.ndarray, float] = 0.0
 
 
 class Branch(NamedTuple):
     """Static compute graph of one policy kind."""
-    step: Callable    # (vals, state, obs) -> (state, pcap)
-    init: Callable    # (vals, gains) -> state
-    extras: Callable  # (state) -> dict of per-step trace extras
+    step: Callable       # (vals, state, obs) -> (state, pcap)
+    init: Callable       # (vals, gains) -> state
+    extras: Callable     # (state) -> dict of per-step trace extras
+    on_change: Callable  # (vals, state) -> state, on a detected phase change
 
 
 BRANCHES: Dict[str, Branch] = {}
 
 
 def register_branch(name: str, step: Callable, init: Callable,
-                    extras: Optional[Callable] = None) -> None:
-    """Register a policy branch (the extension point for custom policies)."""
+                    extras: Optional[Callable] = None,
+                    on_change: Optional[Callable] = None) -> None:
+    """Register a policy branch (the extension point for custom policies).
+
+    ``on_change`` is applied to the packed state when the engine's
+    change-point detector fires (default: identity) — e.g. adaptive PI
+    resets its RLS covariance there so gains re-converge fast."""
     for other in BRANCHES:
         if other != name and branch_tag(other) == branch_tag(name):
             raise ValueError(f"branch tag collision: '{name}' and "
                              f"'{other}' hash alike; pick another name")
     BRANCHES[name] = Branch(step=step, init=init,
-                            extras=extras or (lambda state: {}))
+                            extras=extras or (lambda state: {}),
+                            on_change=on_change
+                            or (lambda vals, state: state))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +200,25 @@ def branch_init(policy: BranchSpec) -> Callable:
             return state.at[BRANCH_TAG_SLOT].set(tags[idx])
 
     return init
+
+
+def branch_on_change(policy: BranchSpec) -> Callable:
+    """(vals, state) -> state, the phase-change reaction; `lax.switch` on
+    vals[0] for heterogeneous sets. The branch tag is preserved."""
+    bs = [BRANCHES[b] for b in as_branches(policy)]
+    if len(bs) == 1:
+        inner = bs[0].on_change
+    else:
+        def inner(vals, state):
+            idx = jnp.clip(vals[0].astype(jnp.int32), 0, len(bs) - 1)
+            return jax.lax.switch(idx, [b.on_change for b in bs], vals,
+                                  state)
+
+    def on_change(vals, state):
+        new = inner(vals, state)
+        return new.at[BRANCH_TAG_SLOT].set(state[BRANCH_TAG_SLOT])
+
+    return on_change
 
 
 def branch_extras(policy: BranchSpec) -> Callable:

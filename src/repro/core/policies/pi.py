@@ -83,8 +83,22 @@ def _pi_rls_extras(state):
             "theta2": r.theta[1]}
 
 
+def _pi_rls_on_change(vals, state):
+    # phase change detected: the identified model is stale. Blow the
+    # covariance back to its fresh-init value (the estimator re-converges
+    # at init speed), drop the old-phase regressor, and force the next
+    # rls_step to re-place the PI gains immediately (since_update >=
+    # dwell) instead of waiting out the dwell window.
+    rls = rls_unpack(state[_RLS_LO:_RLS_HI])
+    rls = rls._replace(P=jnp.eye(2, dtype=jnp.float32) * 1e2,
+                       has_prev=jnp.array(False),
+                       since_update=vals[2])  # vals[1:6][1] = dwell
+    return state.at[_RLS_LO:_RLS_HI].set(rls_pack(rls))
+
+
 register_branch("pi", _pi_step, _pi_init)
-register_branch("pi_rls", _pi_rls_step, _pi_rls_init, _pi_rls_extras)
+register_branch("pi_rls", _pi_rls_step, _pi_rls_init, _pi_rls_extras,
+                on_change=_pi_rls_on_change)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,6 @@ simulation benchmarks and property tests.
 """
 from __future__ import annotations
 
-import collections
 from typing import Iterable, List, Optional
 
 import jax.numpy as jnp
@@ -21,45 +20,127 @@ import numpy as np
 
 
 class HeartbeatAggregator:
-    """Online Eq. 1: collect beats, emit the median heart-rate per period."""
+    """Online Eq. 1: collect beats, emit the median heart-rate per period.
+
+    Beats land in a numpy ring buffer and each `progress` call reduces
+    its window with vectorized numpy (searchsorted + median) instead of
+    rescanning a Python deque beat-by-beat; beats older than the last
+    emit are dropped at emit time (only the newest pre-window beat is
+    kept — the anchor that gives the window's first beat an interval).
+    `beat_many` ingests a whole batch of beats in one append — the
+    buffered path for workloads that report per-step (or per-device)
+    beats in bulk."""
 
     def __init__(self, max_beats: int = 4096):
-        self._times: collections.deque = collections.deque(maxlen=max_beats)
+        self._t = np.empty(max_beats, np.float64)
+        self._w = np.empty(max_beats, np.float64)
+        self._n = 0
+        self._anchor: Optional[float] = None  # newest beat before window
         self._last_emit: Optional[float] = None
+
+    def __len__(self) -> int:
+        return self._n
 
     def beat(self, t: float, work: float = 1.0) -> None:
         # `work` scales the rate: a beat covering w units at interval dt
         # contributes w/dt (generalizes the paper's unit-work loop beat).
-        self._times.append((t, work))
+        if self._last_emit is not None and t < self._last_emit:
+            # late arrival: its window is already emitted. It still
+            # becomes the predecessor the next rated beat pairs with
+            # (the old deque paired window beats with whatever came
+            # before them), and buffering it would break the sorted
+            # invariant the vectorized window reduction relies on.
+            if self._n == 0 and (self._anchor is None
+                                 or t > self._anchor):
+                self._anchor = float(t)
+            return
+        if self._n == len(self._t):
+            self._drop_oldest(1)
+        self._t[self._n] = t
+        self._w[self._n] = work
+        self._n += 1
+
+    def beat_many(self, times, works=None) -> None:
+        """Batched ingestion: append `times` (and optional per-beat
+        `works`) in one vectorized copy. Times must be non-decreasing
+        and not precede already-buffered beats (same contract as calling
+        `beat` in a loop; beats older than the last emit are folded into
+        the anchor exactly like `beat` does)."""
+        times = np.asarray(times, np.float64).reshape(-1)
+        works = (np.ones_like(times) if works is None
+                 else np.broadcast_to(np.asarray(works, np.float64),
+                                      times.shape))
+        if self._last_emit is not None:
+            k = int(np.searchsorted(times, self._last_emit,
+                                    side="left"))
+            if k:
+                if self._n == 0 and (self._anchor is None
+                                     or times[k - 1] > self._anchor):
+                    self._anchor = float(times[k - 1])
+                times, works = times[k:], works[k:]
+        if not len(times):
+            return
+        if len(times) >= len(self._t):  # keep only what the ring holds
+            cut = len(times) - len(self._t)
+            if self._n:  # every buffered beat is older than the batch
+                self._drop_oldest(self._n)
+            if cut:  # the newest cut beat anchors the survivors
+                self._anchor = float(times[cut - 1])
+            times, works = times[cut:], works[cut:]
+        free = len(self._t) - self._n
+        if len(times) > free:
+            self._drop_oldest(len(times) - free)
+        self._t[self._n:self._n + len(times)] = times
+        self._w[self._n:self._n + len(times)] = works
+        self._n += len(times)
+
+    def _drop_oldest(self, k: int) -> None:
+        """Ring overflow: evict the k oldest buffered beats. The newest
+        evicted beat becomes the anchor, so the remaining window still
+        rates its first beat against a real predecessor."""
+        k = min(k, self._n)
+        if k:
+            self._anchor = float(self._t[k - 1])
+            self._t[:self._n - k] = self._t[k:self._n]
+            self._w[:self._n - k] = self._w[k:self._n]
+            self._n -= k
 
     def progress(self, t_i: float) -> float:
         """Median heart-rate of beats in [last_emit, t_i) — paper Eq. 1.
 
-        Intervals are between consecutive arrivals t_{k-1}, t_k with t_k in
-        the window; t_{k-1} may precede the window (it is the anchor), so a
-        single beat per control period still yields a rate.
+        Intervals are between consecutive arrivals t_{k-1}, t_k with t_k
+        in the window; t_{k-1} may precede the window (it is the
+        anchor), so a single beat per control period still yields a
+        rate. Half-open window: a beat landing exactly on a control
+        period edge belongs to the NEXT window, never to both. Emitting
+        consumes the window: beats before t_i leave the buffer (the last
+        one is retained as the next window's anchor).
         """
-        lo = self._last_emit
         self._last_emit = t_i
-        all_beats = list(self._times)
-        if not all_beats:
+        ts = self._t[:self._n]
+        # beats are time-ordered, so the window is the prefix before t_i
+        k = int(np.searchsorted(ts, t_i, side="left"))
+        if k == 0:
             return 0.0
-        # half-open [last_emit, t_i): a beat landing exactly on a control
-        # period edge belongs to the NEXT window, never to both
-        in_win = [i for i, (t, _) in enumerate(all_beats)
-                  if (lo is None or t >= lo) and t < t_i]
-        rates = []
-        for i in in_win:
-            if i == 0:
-                continue
-            t0 = all_beats[i - 1][0]
-            t1, w1 = all_beats[i]
-            dt = t1 - t0
-            if dt > 0:
-                rates.append(w1 / dt)
-        if not rates:
+        t_in, w_in = ts[:k].copy(), self._w[:k].copy()
+        prev = np.empty_like(t_in)
+        prev[1:] = t_in[:-1]
+        anchored = self._anchor is not None
+        prev[0] = self._anchor if anchored else np.nan
+        # consume the window: drop rated beats, keep the newest as anchor
+        self._anchor = float(t_in[-1])
+        self._drop_consumed(k)
+        lo = 0 if anchored else 1
+        dts = t_in[lo:] - prev[lo:]
+        rates = w_in[lo:][dts > 0] / dts[dts > 0]
+        if not len(rates):
             return 0.0
         return float(np.median(rates))
+
+    def _drop_consumed(self, k: int) -> None:
+        self._t[:self._n - k] = self._t[k:self._n]
+        self._w[:self._n - k] = self._w[k:self._n]
+        self._n -= k
 
 
 def progress_from_times(beat_times: jnp.ndarray) -> jnp.ndarray:

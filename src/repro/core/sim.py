@@ -64,11 +64,16 @@ from repro.core import policies as pol
 from repro.core.adaptive import (RLSConfig, RLSState, rls_init, rls_pack,
                                  rls_unpack, rls_values)
 from repro.core.controller import PIGains, PIState, pi_init, pi_step
-from repro.core.plant import (PROFILES, PlantProfile, PlantState,
-                              pcap_linearize, plant_init, plant_step,
-                              simulate)
+from repro.core.plant import (PROFILE_FIELDS, PROFILES, PlantProfile,
+                              PlantState, pcap_linearize, plant_init,
+                              plant_step, simulate)
 from repro.core.policies.pi import (PI_RLS_HI, PI_RLS_LO, PIPolicy,
                                     pi_pack)
+from repro.core.workloads.detect import (DET_N_DETECT, DET_STATE_DIM,
+                                         DetectorConfig, detect_init,
+                                         detect_step, detector_values)
+from repro.core.workloads.schedule import (PhaseSchedule, ScheduleValues,
+                                           active_profile)
 
 logger = logging.getLogger("repro.core.sim")
 
@@ -112,10 +117,10 @@ def _bucket_steps(n: int) -> int:
         _BUCKETS_SEEN.add(b)
     return b
 
-# Canonical packing order for traced plant / gain parameters.
-_PROFILE_FIELDS = ("a", "b", "alpha", "beta", "K_L", "tau", "pcap_min",
-                   "pcap_max", "n_sockets", "noise_scale", "power_noise",
-                   "drop_prob", "drop_exit_prob", "drop_level")
+# Canonical packing order for traced plant / gain parameters. The plant
+# order is owned by repro.core.plant (PROFILE_FIELDS) so phase-schedule
+# rows (repro.core.workloads) pack identically.
+_PROFILE_FIELDS = PROFILE_FIELDS
 _GAIN_FIELDS = ("k_p", "k_i", "setpoint", "pcap_min", "pcap_max",
                 "a", "b", "alpha", "beta")
 
@@ -209,6 +214,10 @@ class _Carry(NamedTuple):
     steps: jnp.ndarray       # live (pre-completion) step count
     done: jnp.ndarray        # bool: total_work reached
     summ: _Summary
+    # packed change-point detector state (DET_STATE_DIM,), or None when
+    # no detector runs — None has no pytree leaves, so detector-free
+    # carries keep the exact pre-detector structure (and compiled graph)
+    det: Optional[jnp.ndarray] = None
 
 
 # state-vector slots of the PI branches; repro.core.policies.pi owns the
@@ -217,10 +226,16 @@ _PI_RLS_LO, _PI_RLS_HI = PI_RLS_LO, PI_RLS_HI
 
 
 def _default_init(profile: PlantProfile, gains: PIGains,
-                  policy=("pi",), policy_vals=None) -> _Carry:
+                  policy=("pi",), policy_vals=None, schedule=None,
+                  det_vals=None) -> _Carry:
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
-    return _Carry(plant=plant_init(profile),
+    # a scheduled run starts in its phase-0 plant (the base profile only
+    # provides the actuator/design context)
+    plant_prof = (profile if schedule is None
+                  else _unpack_profile(active_profile(schedule,
+                                                      jnp.float32(0.0))[0]))
+    return _Carry(plant=plant_init(plant_prof),
                   pol=pol.branch_init(policy)(policy_vals, gains),
                   pcap=jnp.float32(profile.pcap_max),
                   anchor_gap=jnp.float32(0.0),
@@ -228,18 +243,29 @@ def _default_init(profile: PlantProfile, gains: PIGains,
                   t=jnp.float32(0.0),
                   steps=jnp.int32(0),
                   done=jnp.array(False),
-                  summ=_summary_init())
+                  summ=_summary_init(),
+                  det=(None if det_vals is None
+                       else detect_init(det_vals, gains)))
 
 
 def resume_init(plant: PlantState, pi: PIState, pcap,
                 rls: Optional[RLSState] = None,
-                policy_state=None) -> _Carry:
+                policy_state=None, det_state=None, t0=0.0) -> _Carry:
     """Carry that resumes a run from existing plant/controller (and
     optionally RLS estimator) state — the NRM delegation path; the
     heartbeat window and the per-run summaries start fresh. Pass
     ``policy_state`` (a packed (POLICY_STATE_DIM,) vector from
     `SimResult.policy_state`) to resume a non-PI policy; otherwise the
-    PI/RLS states are packed into the PI branch's layout."""
+    PI/RLS states are packed into the PI branch's layout. ``det_state``
+    (a packed (DET_STATE_DIM,) vector from `SimResult.detector_state`)
+    resumes the change-point detector.
+
+    ``t0`` sets the carried sim-time the segment starts at. It defaults
+    to 0 (each segment gets its own `max_time` budget — the NRM path),
+    but a WORKLOAD-scripted run gathers its active phase by this clock:
+    pass the previous segment's `exec_time` so the schedule continues
+    instead of restarting at phase 0 (note `max_time` is then measured
+    on the same absolute clock)."""
     if policy_state is None:
         vec = pi_pack(pi, None if rls is None else rls_pack(rls))
         vec = vec.at[pol.BRANCH_TAG_SLOT].set(float(pol.branch_tag(
@@ -249,15 +275,18 @@ def resume_init(plant: PlantState, pi: PIState, pcap,
     return _Carry(plant=plant, pol=vec, pcap=jnp.float32(pcap),
                   anchor_gap=jnp.float32(0.0),
                   has_anchor=jnp.array(False),
-                  t=jnp.float32(0.0),
+                  t=jnp.float32(t0),
                   steps=jnp.int32(0),
                   done=jnp.array(False),
-                  summ=_summary_init())
+                  summ=_summary_init(),
+                  det=(None if det_state is None
+                       else jnp.asarray(det_state, jnp.float32)))
 
 
 def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                 total_work, max_time, dt, key, *, policy=("pi",),
-                policy_vals=None, cap_limit=None, summary_from=0.0):
+                policy_vals=None, cap_limit=None, summary_from=0.0,
+                schedule=None, detector=None):
     """One fused control period: plant (Eq. 3) -> heartbeat median
     (Eq. 1) -> power-policy command (Eq. 4 PI by default), with
     early-exit-by-mask freezing and online summary reduction.
@@ -274,12 +303,28 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     transient — from the online summary reductions (never from
     time/energy/work).
 
+    ``schedule`` (a traced `ScheduleValues`, or None) makes the PLANT
+    time-varying: the active segment's parameters are gathered by the
+    carried sim-time each period, while gains/actuator context stay the
+    base design's — the phased-workload scenario. ``detector`` (traced
+    `detector_values`, or None) runs the Page-Hinkley change-point
+    detector on progress-model residuals; an alarm applies the policy's
+    `on_change` hook (e.g. RLS covariance reset) and is exposed via
+    `PolicyObs.phase_change` and the `phase_change` trace. Both default
+    to None, which leaves the static-profile graph byte-identical to the
+    pre-phases engine.
+
     Returns (new_carry, out) where out holds this period's trace row.
     """
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
+    if schedule is None:
+        plant_prof, phase_idx = profile, None
+    else:
+        vals, phase_idx = active_profile(schedule, c.t)
+        plant_prof = _unpack_profile(vals)
     kplant, khb = jax.random.split(key)
-    plant_s, meas = plant_step(profile, c.plant, c.pcap, dt, kplant)
+    plant_s, meas = plant_step(plant_prof, c.plant, c.pcap, dt, kplant)
     t = c.t + dt
     # synthesize heartbeats at the measured rate (Eq. 1 input)
     n = jax.random.poisson(khb, jnp.maximum(meas["progress"], 0.0) * dt)
@@ -290,9 +335,24 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                            c.anchor_gap + dt)
     has_anchor = c.has_anchor | (n > 0)
 
+    if detector is None:
+        det_s, change = c.det, jnp.float32(0.0)
+        pol_prev = c.pol
+    else:
+        # residual against the design model's replay of the APPLIED cap
+        det_s, detected = detect_step(detector, c.det, progress,
+                                      gains.linearize(c.pcap), dt)
+        # alarm -> the policy's on_change reaction (RLS covariance reset
+        # + immediate gain re-placement for adaptive PI)
+        pol_prev = jnp.where(detected,
+                             pol.branch_on_change(policy)(policy_vals,
+                                                          c.pol),
+                             c.pol)
+        change = detected.astype(jnp.float32)
+
     obs = pol.PolicyObs(progress=progress, power=meas["power"], dt=dt,
-                        gains=gains)
-    pol_s, pcap = pol.branch_step(policy)(policy_vals, c.pol, obs)
+                        gains=gains, phase_change=change)
+    pol_s, pcap = pol.branch_step(policy)(policy_vals, pol_prev, obs)
     if cap_limit is not None:
         pcap = jnp.minimum(pcap, cap_limit)
 
@@ -301,12 +361,15 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
         lambda a, b: jnp.where(c.done, b, a), new, old)
     plant_s = frz(plant_s, c.plant)
     pol_s = frz(pol_s, c.pol)
+    det_s = frz(det_s, c.det)
     pcap = jnp.where(c.done, c.pcap, pcap)
     anchor_gap = jnp.where(c.done, c.anchor_gap, anchor_gap)
     has_anchor = jnp.where(c.done, c.has_anchor, has_anchor)
     t = jnp.where(c.done, c.t, t)
     progress = jnp.where(c.done, 0.0, progress)
     power = jnp.where(c.done, 0.0, meas["power"])
+    change = jnp.where(c.done, 0.0, change) if detector is not None \
+        else change
 
     acc = ((~c.done) & (c.steps.astype(jnp.float32) >= summary_from)
            ).astype(jnp.float32)
@@ -327,31 +390,42 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     out = {"t": t, "progress": progress, "pcap": pcap,
            "power": power, "energy": plant_s.energy,
            "work": plant_s.work, "valid": ~c.done}
+    if schedule is not None:
+        out["phase"] = jnp.where(c.done, -1, phase_idx)
+    if detector is not None:
+        out["phase_change"] = change
     out.update(pol.branch_extras(policy)(pol_s))
     return _Carry(plant_s, pol_s, pcap, anchor_gap, has_anchor, t,
-                  c.steps + (~c.done).astype(jnp.int32), done, summ), out
+                  c.steps + (~c.done).astype(jnp.int32), done, summ,
+                  det_s), out
 
 
 def _scan_core(max_steps: int, collect: bool = True,
                branches=("pi",)):
     """Pure closed-loop run: (profile_vals, gains_vals, policy_vals,
-    init|None, total_work, max_time, dt, summary_from, key) ->
-    (traces|None, final_carry). The policy branch set is static (part of
-    the jit key); its hyperparameters ride in the traced policy_vals."""
+    sched, det_vals, init|None, total_work, max_time, dt, summary_from,
+    key) -> (traces|None, final_carry). The policy branch set is static
+    (part of the jit key); its hyperparameters ride in the traced
+    policy_vals. ``sched``/``det_vals`` are None (static plant, no
+    detector — the pre-phases graph, byte-identical) or traced
+    `ScheduleValues` / detector parameter vectors; jit separates the
+    variants by pytree structure."""
 
-    def run(profile_vals, gains_vals, policy_vals,
+    def run(profile_vals, gains_vals, policy_vals, sched, det_vals,
             init: Optional[_Carry], total_work, max_time, dt,
             summary_from, key):
         profile = _unpack_profile(profile_vals)
         gains = _unpack_gains(gains_vals)
-        carry0 = (_default_init(profile, gains, branches, policy_vals)
+        carry0 = (_default_init(profile, gains, branches, policy_vals,
+                                sched, det_vals)
                   if init is None else init)
 
         def body(c: _Carry, k):
             c2, out = engine_step(profile, gains, c, total_work,
                                   max_time, dt, k, policy=branches,
                                   policy_vals=policy_vals,
-                                  summary_from=summary_from)
+                                  summary_from=summary_from,
+                                  schedule=sched, detector=det_vals)
             return c2, (out if collect else None)
 
         keys = jax.random.split(key, max_steps)
@@ -362,23 +436,46 @@ def _scan_core(max_steps: int, collect: bool = True,
 
 
 # `init` is a pytree (or None); jit caches on its structure, so fresh and
-# resumed variants trace separately. The branch tuple keys the policy's
-# static compute graph; all its hyperparameters are traced.
+# resumed variants trace separately (likewise schedule/detector None vs
+# traced arrays). The branch tuple keys the policy's static compute
+# graph; all its hyperparameters are traced.
 @functools.lru_cache(maxsize=None)
 def _jit_run(max_steps: int, collect: bool = True, branches=("pi",)):
     return jax.jit(_scan_core(max_steps, collect, branches))
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True):
+def _jit_sweep_cached(max_steps: int, branches, collect: bool,
+                      scheduled: bool, detected: bool):
     run = _scan_core(max_steps, collect, branches)
-    f = lambda pv, gv, av, tw, mt, dt, sf, key: run(pv, gv, av, None, tw,
-                                                    mt, dt, sf, key)
-    f = jax.vmap(f, in_axes=(None,) * 7 + (0,))                # seeds
-    f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 5)     # policies
-    f = jax.vmap(f, in_axes=(None, 0, None) + (None,) * 5)     # eps
-    f = jax.vmap(f, in_axes=(0, 0, 0) + (None,) * 5)           # profs
+    f = lambda pv, gv, av, sv, dv, tw, mt, dt, sf, key: run(
+        pv, gv, av, sv, dv, None, tw, mt, dt, sf, key)
+    sched_ax = 0 if scheduled else None
+    det_ax = 0 if detected else None
+    f = jax.vmap(f, in_axes=(None,) * 9 + (0,))                  # seeds
+    if scheduled:
+        f = jax.vmap(f, in_axes=(None, None, None, 0) + (None,) * 6)
+    f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 7)       # policies
+    f = jax.vmap(f, in_axes=(None, 0, None) + (None,) * 7)       # eps
+    f = jax.vmap(f, in_axes=(0, 0, 0, sched_ax, det_ax)
+                 + (None,) * 5)                                  # profs
     return jax.jit(f)
+
+
+def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
+               scheduled: bool = False, detected: bool = False):
+    """Vmapped grid engine. Axis nest (outer->inner): profiles, eps,
+    policies, [workloads], seeds; the workload axis exists only when
+    ``scheduled`` (so schedule-free sweeps keep their exact pre-phases
+    shapes and executables). Schedule leaves are (P, W, ...) — resolved
+    per profile; detector values are per-profile (P, DET_PARAM_DIM).
+    A plain wrapper over the lru cache so defaulted and explicit calls
+    share one cache key."""
+    return _jit_sweep_cached(max_steps, tuple(branches), bool(collect),
+                             bool(scheduled), bool(detected))
+
+
+_jit_sweep.cache_info = _jit_sweep_cached.cache_info
 
 
 @functools.lru_cache(maxsize=None)
@@ -470,15 +567,25 @@ class SimResult:
     rls_state: Optional[RLSState] = None  # final estimator (adaptive runs)
     # final packed policy state (resume via resume_init(policy_state=...))
     policy_state: Optional[np.ndarray] = None
+    # final packed change-point detector state (detector= runs); resume
+    # via resume_init(det_state=...). n_phase_changes is its alarm count.
+    detector_state: Optional[np.ndarray] = None
+
+    @property
+    def n_phase_changes(self) -> int:
+        return (0 if self.detector_state is None
+                else int(self.detector_state[DET_N_DETECT]))
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Batched runs over profiles x epsilons [x policies] x seeds.
+    """Batched runs over profiles x epsilons [x policies] [x workloads]
+    x seeds.
 
     Trace arrays have shape (..., T) where ... is (P, E, S) — or
-    (P, E, A, S) for policy/adaptive grids — with the P (and A) axes
-    squeezed away when a single profile (single Policy/RLSConfig) was
+    (P, E, A, S) for policy/adaptive grids, (P, E, A, W, S) with a
+    workload axis — with the P (and A, W) axes squeezed away when a
+    single profile (single Policy/RLSConfig, single PhaseSchedule) was
     passed. Frozen
     (post-completion) steps carry `valid == False`. In summary mode
     (`collect_traces=False`) `traces` is None and only `summary` (plus
@@ -492,6 +599,8 @@ class SweepResult:
     n_steps: jnp.ndarray
     summary: Dict[str, jnp.ndarray] = dataclasses.field(
         default_factory=dict)
+    # per-run change-point alarm counts (detector= sweeps), else None
+    detections: Optional[jnp.ndarray] = None
 
     def masked_mean(self, key: str) -> np.ndarray:
         """Per-run mean of a trace over its live steps. For 'progress'
@@ -520,7 +629,10 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                          design: Optional[PlantProfile] = None,
                          policy: Optional[pol.Policy] = None,
                          collect_traces: bool = True,
-                         summary_warmup: int = 0) -> SimResult:
+                         summary_warmup: int = 0,
+                         workload: Optional[PhaseSchedule] = None,
+                         detector: Optional[DetectorConfig] = None
+                         ) -> SimResult:
     """One fully-jitted closed-loop run (drop-in for NRM.run_simulated).
 
     Pass either `epsilon` (gains placed from the profile's identified
@@ -533,7 +645,16 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
     initial gains were placed on (defaults to the plant profile) — the
     estimator linearizes against it. An `init` carry built by
     `resume_init` continues a previous run (including its estimator /
-    policy state when `rls=` / `policy_state=` was passed)."""
+    policy / detector state when `rls=` / `policy_state=` /
+    `det_state=` was passed).
+
+    ``workload=PhaseSchedule(...)`` scripts a TIME-VARYING plant: each
+    phase's (duration, plant-delta) resolves against `profile` and the
+    engine gathers the active segment by carried sim-time; traces gain a
+    `phase` index key. ``detector=DetectorConfig(...)`` runs the online
+    change-point detector on progress-model residuals (traces gain
+    `phase_change`; alarms trigger the policy's `on_change` hook — the
+    RLS covariance reset for adaptive PI)."""
     profile = _resolve(profile)
     if gains is None:
         if epsilon is None:
@@ -578,13 +699,25 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
             raise ValueError("init carries RLS state but adaptive=None; "
                              "pass the RLSConfig so estimator params are "
                              "traced")
+    sched = None if workload is None else workload.resolve(profile)
+    det_design = _resolve(design) if design is not None else profile
+    dv = (None if detector is None
+          else detector_values(detector, det_design))
+    if init is not None and dv is not None and init.det is None:
+        # resume carry predates the detector: start a fresh one so
+        # detector= is honoured rather than silently dropped
+        init = init._replace(det=detect_init(dv, gains))
+    elif init is not None and dv is None and init.det is not None:
+        raise ValueError("init carries detector state but detector=None; "
+                         "pass the DetectorConfig so its params are "
+                         "traced")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     if key is None:
         key = jax.random.PRNGKey(seed)
     traces, final = _jit_run(max_steps, collect_traces, (branch,))(
-        profile_values(profile), gains_values(gains), pvals, init,
-        jnp.float32(total_work), jnp.float32(max_time), jnp.float32(dt),
-        jnp.float32(summary_warmup), key)
+        profile_values(profile), gains_values(gains), pvals, sched, dv,
+        init, jnp.float32(total_work), jnp.float32(max_time),
+        jnp.float32(dt), jnp.float32(summary_warmup), key)
     # device-side trim: ONE scalar (the live-step counter) decides the
     # slice, so only n real steps cross to host — not the padded buffers
     n = int(final.steps)
@@ -610,7 +743,9 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                          np.asarray, _summary_dict(final,
                                                    _hist_edges(profile))),
                      rls_state=rls_state,
-                     policy_state=vec)
+                     policy_state=vec,
+                     detector_state=(None if final.det is None
+                                     else np.asarray(final.det)))
 
 
 def sweep(profiles: Union[str, PlantProfile,
@@ -624,9 +759,12 @@ def sweep(profiles: Union[str, PlantProfile,
           adaptive: Union[None, RLSConfig, Sequence[RLSConfig]] = None,
           policies: Union[None, pol.Policy, Sequence[pol.Policy]] = None,
           collect_traces: bool = True,
-          summary_warmup: int = 0) -> SweepResult:
-    """Vmapped closed-loop grid: profiles x epsilons [x policies] x
-    seeds, one compile.
+          summary_warmup: int = 0,
+          workloads: Union[None, PhaseSchedule,
+                           Sequence[PhaseSchedule]] = None,
+          detector: Optional[DetectorConfig] = None) -> SweepResult:
+    """Vmapped closed-loop grid: profiles x epsilons [x policies]
+    [x workloads] x seeds, one compile.
 
     The compiled function is cached by scan length, mode and the POLICY
     BRANCH SET only — plant, gain and policy hyperparameters are all
@@ -644,7 +782,16 @@ def sweep(profiles: Union[str, PlantProfile,
     the epsilon-independent k_i). `collect_traces=False` switches to the
     O(grid)-memory summary mode for very large grids. `summary_warmup`
     excludes each run's first steps (the descent transient) from the
-    online summary reductions only."""
+    online summary reductions only.
+
+    Pass `workloads=` a single `PhaseSchedule` (axis squeezed) or a
+    sequence (inserts a W axis between policies and seeds): each
+    schedule resolves against EVERY profile on the profile axis (its
+    deltas/scales script that profile's plant over time), and phased
+    grids share one compiled engine per scan-length bucket — the
+    schedule arrays are traced. `detector=` runs the change-point
+    detector in every run (design model = each profile);
+    `SweepResult.detections` then carries per-run alarm counts."""
     single = isinstance(profiles, (str, PlantProfile))
     profs = [_resolve(p) for p in ([profiles] if single else profiles)]
     eps = [float(e) for e in epsilons]
@@ -683,10 +830,28 @@ def sweep(profiles: Union[str, PlantProfile,
         jnp.stack([pol.policy_values(
             p_, p, PIGains.from_model(p, eps[0], tau_obj), kind=k)
             for p_, k in zip(pls, kinds)]) for p in profs])
+    if workloads is None:
+        sv, squeeze_w = None, None
+    else:
+        squeeze_w = isinstance(workloads, PhaseSchedule)
+        wls = [workloads] if squeeze_w else list(workloads)
+        if not wls:
+            raise ValueError("workloads= needs at least one "
+                             "PhaseSchedule")
+        # schedule leaves stacked (P, W, ...): resolved per profile
+        sv = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[jax.tree_util.tree_map(lambda *ws: jnp.stack(ws),
+                                     *[w.resolve(p) for w in wls])
+              for p in profs])
+    dv = (None if detector is None
+          else jnp.stack([detector_values(detector, p) for p in profs]))
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
-    traces, final = _jit_sweep(max_steps, branches, collect_traces)(
-        pv, gv, av, jnp.float32(total_work), jnp.float32(max_time),
-        jnp.float32(dt), jnp.float32(summary_warmup), keys)
+    traces, final = _jit_sweep(max_steps, branches, collect_traces,
+                               sv is not None, dv is not None)(
+        pv, gv, av, sv, dv, jnp.float32(total_work),
+        jnp.float32(max_time), jnp.float32(dt),
+        jnp.float32(summary_warmup), keys)
     edges = {k: np.stack([_hist_edges(p)[k] for p in profs])
              for k in ("progress_edges", "pcap_edges")}
     summary = _summary_dict(final, edges)
@@ -696,6 +861,10 @@ def sweep(profiles: Union[str, PlantProfile,
             lambda x: x[(slice(None),) * axis + (0,)]
             if hasattr(x, "ndim") and x.ndim > axis else x, tree)
 
+    if squeeze_w:  # single PhaseSchedule: drop the W axis (P, E, A, W, S)
+        traces, final = squeeze(traces, 3), squeeze(final, 3)
+        summary = {k: v if k.endswith("_edges") else squeeze(v, 3)
+                   for k, v in summary.items()}
     if squeeze_pol:
         traces, final = squeeze(traces, 2), squeeze(final, 2)
         summary = {k: v if k.endswith("_edges") else squeeze(v, 2)
@@ -709,7 +878,9 @@ def sweep(profiles: Union[str, PlantProfile,
                        work=final.plant.work,
                        completed=final.plant.work >= total_work,
                        n_steps=final.steps,
-                       summary=summary)
+                       summary=summary,
+                       detections=(None if final.det is None
+                                   else final.det[..., DET_N_DETECT]))
 
 
 @functools.lru_cache(maxsize=None)

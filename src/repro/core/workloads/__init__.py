@@ -1,0 +1,31 @@
+"""Phased-workload subsystem: time-varying plants + phase-change detection.
+
+The paper's premise is that applications "dynamically undergo variations
+in workload, due to phases or data/compute movement between devices" —
+this package makes that scenario a first-class scan citizen:
+
+* `schedule` — `PhaseSchedule`: a script of (duration, plant-delta)
+  segments packed into fixed-width traced arrays that the scan engine
+  (`repro.core.sim`) gathers from by carried sim-time, plus generators
+  (STREAM<->DGEMM alternation, roofline-derived schedules, randomized
+  Markov chains for property tests).
+* `detect` — an online change-point detector (two-sided Page-Hinkley /
+  CUSUM on progress-model residuals) threaded through the scan carry,
+  which on detection resets the RLS covariance and re-derives PI gains
+  via the policy contract's `on_change` hook.
+"""
+from repro.core.workloads.detect import (DET_PARAM_FIELDS, DET_STATE_DIM,
+                                         DetectorConfig, detect_init,
+                                         detect_step, detector_values)
+from repro.core.workloads.schedule import (MAX_PHASES, Phase, PhaseSchedule,
+                                           ScheduleValues, active_profile,
+                                           markov_schedule,
+                                           roofline_schedule,
+                                           stream_dgemm_schedule)
+
+__all__ = [
+    "MAX_PHASES", "Phase", "PhaseSchedule", "ScheduleValues",
+    "active_profile", "markov_schedule", "roofline_schedule",
+    "stream_dgemm_schedule", "DET_PARAM_FIELDS", "DET_STATE_DIM",
+    "DetectorConfig", "detect_init", "detect_step", "detector_values",
+]

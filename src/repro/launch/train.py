@@ -72,6 +72,10 @@ def main(argv=None) -> dict:
     p.add_argument("--epsilon", type=float, default=0.10)
     p.add_argument("--plant", default="v5e-chip")
     p.add_argument("--adaptive", action="store_true")
+    p.add_argument("--control-period", type=float, default=1.0,
+                   help="controller sampling period in simulated "
+                   "seconds (smoke tests shrink it so a handful of "
+                   "optimizer steps spans several control periods)")
     p.add_argument("--checkpoint-dir", default="")
     p.add_argument("--checkpoint-every", type=int, default=20)
     p.add_argument("--resume", action="store_true")
@@ -104,7 +108,8 @@ def main(argv=None) -> dict:
     it = TokenIterator(ds)
     pc_cfg = PowerControlConfig(enabled=args.power, epsilon=args.epsilon,
                                 plant_profile=args.plant,
-                                adaptive=args.adaptive)
+                                adaptive=args.adaptive,
+                                sampling_period=args.control_period)
     nrm = NRM(pc_cfg) if args.power else None
 
     mgr = (CheckpointManager(args.checkpoint_dir)

@@ -401,9 +401,15 @@ def test_nrm_resume_round_trips_non_pi_policy_state():
     with pytest.raises(ValueError, match="weights"):
         simulate_closed_loop("gros", 0.1, total_work=100.0,
                              policy=OfflineRLPolicy(weights=(1.0, 2.0)))
-    # the runtime path stays PI-only and says so
-    with pytest.raises(NotImplementedError):
-        nrm.control_step()
+    # the runtime path dispatches through the policy contract too (PR 4):
+    # a control period continues the SAME resumed ladder state and the
+    # actuator receives the command
+    level_before = float(nrm._policy_state[0])
+    rec = nrm.control_step()
+    assert abs(float(nrm._policy_state[0]) - level_before) <= max(
+        dc.up_step, dc.down_step)
+    assert nrm.actuator._pcap == pytest.approx(
+        np.clip(rec.pcap, nrm.profile.pcap_min, nrm.profile.pcap_max))
 
 
 def test_nrm_adaptive_checkpoint_round_trips_estimator_state():

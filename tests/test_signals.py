@@ -76,3 +76,131 @@ def test_progress_tracks_true_rate(rate, jitter, seed):
 def test_progress_from_times_matches_numpy():
     times = np.cumsum(np.full(32, 0.25))
     assert float(progress_from_times(times)) == pytest.approx(4.0, rel=1e-5)
+
+
+class _DequeOracle:
+    """The pre-ring-buffer HeartbeatAggregator, transcribed verbatim:
+    the equivalence oracle for the vectorized implementation."""
+
+    def __init__(self, max_beats: int = 4096):
+        import collections
+        self._times = collections.deque(maxlen=max_beats)
+        self._last_emit = None
+
+    def beat(self, t, work=1.0):
+        self._times.append((t, work))
+
+    def progress(self, t_i):
+        lo = self._last_emit
+        self._last_emit = t_i
+        all_beats = list(self._times)
+        if not all_beats:
+            return 0.0
+        in_win = [i for i, (t, _) in enumerate(all_beats)
+                  if (lo is None or t >= lo) and t < t_i]
+        rates = []
+        for i in in_win:
+            if i == 0:
+                continue
+            t0 = all_beats[i - 1][0]
+            t1, w1 = all_beats[i]
+            dt = t1 - t0
+            if dt > 0:
+                rates.append(w1 / dt)
+        if not rates:
+            return 0.0
+        return float(np.median(rates))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rate=st.floats(0.5, 200.0),
+       jitter=st.floats(0.0, 0.4))
+def test_ring_buffer_matches_deque_oracle(seed, rate, jitter):
+    """Property: interleaved beats and emits produce the same Eq. 1
+    sequence from the numpy ring buffer as from the per-beat deque."""
+    rng = np.random.default_rng(seed)
+    times = synth_heartbeats(rng, rate, duration=6.0, jitter=jitter)
+    hb, oracle = HeartbeatAggregator(), _DequeOracle()
+    emits = np.sort(rng.uniform(0.0, 7.0, size=8))
+    ti = 0
+    for t in times:
+        while ti < len(emits) and emits[ti] <= t:
+            assert hb.progress(emits[ti]) == pytest.approx(
+                oracle.progress(emits[ti]), rel=1e-12, abs=1e-12)
+            ti += 1
+        w = float(rng.uniform(0.5, 2.0))
+        hb.beat(t, w)
+        oracle.beat(t, w)
+    for e in emits[ti:]:
+        assert hb.progress(e) == pytest.approx(oracle.progress(e),
+                                               rel=1e-12, abs=1e-12)
+
+
+def test_beat_many_equals_beat_loop():
+    """Batched ingestion is exactly the per-beat loop."""
+    rng = np.random.default_rng(0)
+    times = np.sort(rng.uniform(0.0, 4.0, size=256))
+    works = rng.uniform(0.5, 3.0, size=256)
+    a, b = HeartbeatAggregator(), HeartbeatAggregator()
+    a.beat_many(times, works)
+    for t, w in zip(times, works):
+        b.beat(t, w)
+    for e in (1.0, 2.5, 4.1):
+        assert a.progress(e) == pytest.approx(b.progress(e), rel=1e-12)
+    # unit-work default and empty batch
+    c = HeartbeatAggregator()
+    c.beat_many([])
+    c.beat_many([0.1, 0.2, 0.3])
+    assert c.progress(0.4) == pytest.approx(10.0, rel=1e-6)
+
+
+def test_beats_drop_after_emit_bounded_memory():
+    """Emitting consumes the window: the buffer holds only un-emitted
+    beats (+ the anchor), so a long run never rescans old beats."""
+    hb = HeartbeatAggregator(max_beats=64)
+    t = 0.0
+    for period in range(50):
+        hb.beat_many(t + np.arange(1, 11) * 0.1)  # 10 beats per period
+        t += 1.0
+        p = hb.progress(t)
+        assert p == pytest.approx(10.0, rel=1e-6)
+        # all rated beats consumed; only the edge beat (exactly at t,
+        # which belongs to the NEXT half-open window) may remain
+        assert len(hb) <= 1
+
+
+def test_ring_overflow_keeps_newest_beats():
+    """More beats than capacity within one window: the oldest fall out
+    (the newest evicted beat anchors the survivors) and the rate is
+    still the true one — via beat_many AND the per-beat loop."""
+    for ingest in ("many", "loop"):
+        hb = HeartbeatAggregator(max_beats=32)
+        times = np.arange(1, 101) * 0.01  # 100 beats at 100 Hz
+        if ingest == "many":
+            hb.beat_many(times)
+        else:
+            for t in times:
+                hb.beat(t)
+        assert len(hb) == 32
+        assert hb._anchor == pytest.approx(times[-33])
+        assert hb.progress(1.01) == pytest.approx(100.0, rel=1e-6)
+
+
+def test_late_beats_fold_into_anchor_not_window():
+    """A beat timestamped before the last emit belongs to an
+    already-emitted window: it must not be rated into the NEXT window
+    (which would also break the sorted-buffer invariant), but it still
+    anchors the next window's first beat."""
+    hb = HeartbeatAggregator()
+    hb.beat(0.5)
+    assert hb.progress(1.0) == 0.0  # 0.5 consumed, becomes the anchor
+    hb.beat(0.8)    # late: window [.., 1.0) already emitted
+    hb.beat(1.2)
+    # the late 0.8 beat replaces 0.5 as the anchor: 1/(1.2-0.8)
+    assert hb.progress(2.0) == pytest.approx(2.5, rel=1e-6)
+    # batched variant: late prefix folds into the anchor the same way
+    hb2 = HeartbeatAggregator()
+    hb2.beat(0.5)
+    hb2.progress(1.0)
+    hb2.beat_many([0.8, 1.2])
+    assert hb2.progress(2.0) == pytest.approx(2.5, rel=1e-6)

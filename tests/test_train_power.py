@@ -1,0 +1,100 @@
+"""End-to-end smoke of the train driver's --power path: a few real
+optimizer steps with the NRM in the loop (heartbeats -> control_step ->
+actuator), plus a checkpoint/resume round-trip of the controller state
+(the ISSUE/ROADMAP runtime-path coverage gap).
+
+The kill/resume phases run as SEPARATE processes — that is what a
+restart after a node failure actually is, and it sidesteps a jax
+persistent-compilation-cache + donated-buffer abort when the identical
+train step is re-jitted in one process (the cache is enabled by
+conftest for every test process)."""
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.base import PowerControlConfig
+from repro.core.nrm import NRM
+from repro.core.workloads import DetectorConfig
+
+_ARGS = ["--arch", "qwen3-8b", "--reduced", "--batch", "2", "--seq", "32",
+         "--power", "--epsilon", "0.1", "--control-period", "0.02",
+         "--quiet"]
+
+
+def _train(args, check=True):
+    env = dict(os.environ)
+    root = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(root / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        capture_output=True, text=True, env=env, cwd=root, timeout=300)
+    if check and proc.returncode != 0:
+        raise AssertionError(
+            f"train exited {proc.returncode}:\n{proc.stdout}\n"
+            f"{proc.stderr}")
+    return proc
+
+
+def test_runtime_loop_heartbeats_to_actuator():
+    """The runtime chain in isolation: workload heartbeats feed Eq. 1,
+    control_step runs the policy and the actuator applies the cap —
+    the loop settles near the setpoint."""
+    nrm = NRM(PowerControlConfig(epsilon=0.15, plant_profile="gros"),
+              detector=DetectorConfig())
+    rng = np.random.default_rng(0)
+    for period in range(120):
+        meas = nrm.actuator.advance(1.0)
+        t0 = nrm._t
+        n = int(rng.poisson(max(meas["progress"], 0.0)))
+        if n:
+            nrm.hb.beat_many(t0 + (np.arange(n) + 0.5) / n)
+        rec = nrm.control_step(dt=1.0)
+    sp = rec.setpoint
+    tail = [r.progress for r in nrm.records[60:]]
+    assert abs(np.mean(tail) - sp) < 0.15 * sp
+    # the actuator really applied the command
+    assert nrm.actuator._pcap == pytest.approx(
+        np.clip(rec.pcap, nrm.profile.pcap_min, nrm.profile.pcap_max))
+    # quiet plant: the live detector must not cry wolf
+    assert not any(r.phase_change for r in nrm.records)
+
+
+def test_train_power_smoke_with_checkpoint_resume():
+    """Drive the real train loop (--power) for a few optimizer steps,
+    kill it mid-run, and resume from the checkpoint: the controller
+    state must round-trip and training must complete."""
+    ckpt = tempfile.mkdtemp(prefix="repro_pwr_ckpt_")
+    try:
+        common = _ARGS + ["--checkpoint-dir", ckpt,
+                          "--checkpoint-every", "4"]
+        proc = _train(common + ["--steps", "14", "--kill-at", "10"],
+                      check=False)
+        assert proc.returncode == 17, proc.stderr
+        # the checkpoint carries NRM controller state
+        sidecars = sorted(Path(ckpt).glob("*/meta.json"))
+        assert sidecars, "no checkpoint written before the kill"
+        extra = json.loads(sidecars[-1].read_text())["extra"]
+        nrm_state = extra["nrm"]
+        assert {"prev_error", "prev_pcap_l", "t"} <= set(nrm_state)
+        # restoring into a fresh NRM reproduces the controller state
+        nrm = NRM(PowerControlConfig(epsilon=0.1,
+                                     plant_profile="v5e-chip"))
+        nrm.load_state_dict(nrm_state)
+        assert float(nrm.controller.state.prev_error) == pytest.approx(
+            nrm_state["prev_error"])
+        assert nrm._t == pytest.approx(nrm_state["t"])
+        # resume to completion (a fresh process, as a real restart is):
+        # power control stays in the loop and training finishes
+        proc = _train(common + ["--steps", "14", "--resume", "--kill-at",
+                                "0"])
+        assert "[resume] restored step" in proc.stdout
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
