@@ -44,7 +44,11 @@ def main() -> None:
         # machine-readable BENCH_sim.json perf record at the repo root
         "telemetry": telemetry,
     }
+    if args.only and args.only not in modules:
+        p.error(f"--only {args.only!r}: unknown module; choose from "
+                f"{sorted(modules)}")
     failed = False
+    executed = set()
     print("name,us_per_call,derived")
     for key, mod in modules.items():
         if args.only and key != args.only:
@@ -52,10 +56,22 @@ def main() -> None:
         try:
             for name, us, derived in mod.run(quick=not args.full):
                 print(f"{name},{us:.1f},{derived}")
+            executed.add(key)
         except Exception:
             failed = True
             traceback.print_exc()
             print(f"{key}/FAILED,0,error")
+    # the telemetry append is what CI archives: skipping it silently
+    # would fork the perf trajectory, so a full run that did not append
+    # (telemetry.run also self-verifies the written file) FAILS loudly
+    if args.only and args.only != "telemetry":
+        print(f"telemetry/skipped,0,--only={args.only} "
+              "(no BENCH_sim.json append this run)")
+    elif "telemetry" not in executed:
+        failed = True
+        print("telemetry/FAILED,0,telemetry append skipped — "
+              "BENCH_sim.json not updated this run", file=sys.stderr)
+        print("telemetry/FAILED,0,append-skipped")
     if failed:
         sys.exit(1)
 

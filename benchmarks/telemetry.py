@@ -9,13 +9,22 @@ Entries (each with first-call and warm wall time plus runs/sec):
 * ``adaptive_grid``  — an RLS hyperparameter grid (eps x lambda x seeds,
   summary mode) through the adaptive scan engine.
 * ``fleet_64`` / ``fleet_1024`` — the two-level fleet run at both scales.
+* ``sweep_throughput`` — the headline metric: warm runs/sec of one
+  summary-mode PI grid through each execution layout (one-shot scan,
+  chunked+donated scan, typed-PI scan, chunked scan sharded over 2
+  forced host devices in a subprocess, and the Pallas closed-loop
+  kernel in interpret mode on a reduced grid). ``improvement`` is
+  best-alternative vs one-shot.
 
 "cold" is the first in-process call: with a warm persistent XLA cache it
 measures trace + cache load, not a from-scratch compile."""
 from __future__ import annotations
 
 import json
+import os
 import platform
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -73,6 +82,8 @@ def collect(quick: bool = True) -> dict:
             lambda: simulate_fleet(prof, fc, steps=60, seed=0)["power"],
             n)
 
+    entries["sweep_throughput"] = _sweep_throughput(quick)
+
     return {
         "schema": 1,
         "quick": quick,
@@ -81,6 +92,114 @@ def collect(quick: bool = True) -> dict:
         "backend": jax.default_backend(),
         "entries": entries,
     }
+
+
+def _sweep_throughput(quick: bool = True) -> dict:
+    """Warm runs/sec of ONE summary-mode PI grid through every execution
+    layout (`repro.core.sim.sweep` backends / `repro.core.executor`).
+    The grid is identical across layouts, so the ratios are honest; the
+    recorded ``improvement`` is best-alternative vs the one-shot scan
+    engine. The Pallas kernel rides a reduced grid off-TPU — the
+    interpreter executes the kernel body op by op, so its number is a
+    correctness-path record, not a horse race."""
+    import jax
+
+    from repro.core.sim import sweep
+
+    eps = (0.0, 0.05, 0.1, 0.15, 0.3)
+    # big enough that per-chunk dispatch amortizes and the device split
+    # has real work to parallelize (the sharded win needs scale)
+    seeds = 2000 if quick else 5000
+    n_runs = len(eps) * seeds
+    kw = dict(total_work=1200.0, max_time=500.0, collect_traces=False)
+    chunk = n_runs // 2
+
+    def timed(variant_kw, n):
+        fn = lambda: sweep("gros", eps, range(seeds), **kw,
+                           **variant_kw).exec_time
+        jax.block_until_ready(fn())
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        warm = time.time() - t0
+        return {"warm_s": round(warm, 4),
+                "runs_per_sec": round(n / max(warm, 1e-9), 2)}
+
+    backends = {
+        "scan_oneshot": timed({}, n_runs),
+        "scan_chunked": timed({"chunk_size": chunk}, n_runs),
+        "scan_typed_pi": timed({"typed_pi": True}, n_runs),
+    }
+    # sharded: ONE chunk split across both devices — chunking pays its
+    # dispatch cost only when it buys memory or parallelism, so the
+    # sharded entry uses the layout that buys parallelism
+    sharded = _sharded_subprocess(eps, seeds, n_runs, kw)
+    if sharded is not None:
+        backends["scan_sharded_2dev"] = sharded
+    if quick:
+        # reduced grid: interpret mode is the correctness path on CPU
+        pallas_seeds = 4
+        pk = dict(kw)
+        pk["max_time"] = 128.0
+        fnp = lambda: sweep("gros", eps[:2], range(pallas_seeds),
+                            backend="pallas", **pk).exec_time
+        jax.block_until_ready(fnp())
+        t0 = time.time()
+        jax.block_until_ready(fnp())
+        warm = time.time() - t0
+        backends["pallas_interpret"] = {
+            "warm_s": round(warm, 4),
+            "runs_per_sec": round(2 * pallas_seeds / max(warm, 1e-9), 2),
+            "note": "reduced grid; interpret mode (no TPU)"}
+    one = backends["scan_oneshot"]
+    alts = {k: v for k, v in backends.items()
+            if k not in ("scan_oneshot", "pallas_interpret")}
+    best = max(alts, key=lambda k: alts[k]["runs_per_sec"])
+    return {"runs": n_runs,
+            "cold_s": 0.0,  # layouts share the warmed engines above
+            "warm_s": alts[best]["warm_s"],
+            "runs_per_sec": alts[best]["runs_per_sec"],
+            "best": best,
+            "improvement": round(alts[best]["runs_per_sec"]
+                                 / max(one["runs_per_sec"], 1e-9), 3),
+            "backends": backends}
+
+
+def _sharded_subprocess(eps, seeds, chunk, kw) -> dict | None:
+    """Warm-time the chunked sweep across 2 forced host CPU devices.
+    Device count is fixed at jax init, so this runs in a subprocess
+    (sharing the persistent XLA cache); None when unavailable."""
+    if (os.cpu_count() or 1) < 2:
+        return None
+    code = f"""
+import json, time
+import jax
+from repro.core.sim import enable_compilation_cache, sweep
+enable_compilation_cache()
+kw = dict(total_work={kw['total_work']}, max_time={kw['max_time']},
+          collect_traces=False, chunk_size={chunk}, devices="all")
+fn = lambda: sweep("gros", {tuple(eps)}, range({seeds}), **kw).exec_time
+jax.block_until_ready(fn())
+t0 = time.time()
+jax.block_until_ready(fn())
+print(json.dumps({{"warm_s": round(time.time() - t0, 4)}}))
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    root = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = (str(root / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    try:
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True,
+                             timeout=900, cwd=root)
+        warm = json.loads(out.stdout.strip().splitlines()[-1])["warm_s"]
+    except Exception:
+        return None
+    n = len(eps) * seeds
+    return {"warm_s": warm,
+            "runs_per_sec": round(n / max(warm, 1e-9), 2),
+            "note": "subprocess, 2 forced host devices"}
 
 
 def _read_bench() -> dict:
@@ -104,7 +223,8 @@ def append_entry(name: str, payload: dict) -> None:
     BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
 
 
-_OWNED_PREFIXES = ("fig7_sweep", "adaptive_grid", "fleet_")
+_OWNED_PREFIXES = ("fig7_sweep", "adaptive_grid", "fleet_",
+                   "sweep_throughput")
 _HISTORY_CAP = 50
 
 
@@ -117,6 +237,26 @@ def _git_rev() -> str:
             cwd=BENCH_PATH.parent).stdout.strip() or "unknown"
     except Exception:
         return "unknown"
+
+
+def _merge_history(history: list, row: dict,
+                   cap: int = _HISTORY_CAP) -> list:
+    """Append one trajectory row, DEDUPED per (git rev, quick/full
+    mode): re-running the benchmarks on the same commit in the same
+    mode replaces that commit's row in place (keeping its position in
+    the trajectory) instead of appending a duplicate that pushes real
+    history out of the cap. Quick and full rows measure different
+    workload scales, so they never overwrite each other."""
+    rev = row.get("rev")
+    out = list(history)
+    for i, h in enumerate(out):
+        if (rev != "unknown" and h.get("rev") == rev
+                and h.get("quick") == row.get("quick")):
+            out[i] = row
+            break
+    else:
+        out.append(row)
+    return out[-cap:]
 
 
 def run(quick: bool = True):
@@ -133,16 +273,25 @@ def run(quick: bool = True):
     # the trajectory: one compact row per benchmark run (warm seconds of
     # every timed entry), keyed by commit — this is what accumulates
     # across PRs instead of being clobbered by each snapshot
-    history = list(prev_data.get("history", []))
-    history.append({
-        "rev": _git_rev(),
-        "date": datetime.datetime.now(datetime.timezone.utc)
-        .strftime("%Y-%m-%dT%H:%M:%SZ"),
-        "quick": quick,
-        "warm_s": {k: v["warm_s"] for k, v in fresh.items()},
-    })
-    data["history"] = history[-_HISTORY_CAP:]
+    rev = _git_rev()
+    data["history"] = _merge_history(
+        list(prev_data.get("history", [])),
+        {"rev": rev,
+         "date": datetime.datetime.now(datetime.timezone.utc)
+         .strftime("%Y-%m-%dT%H:%M:%SZ"),
+         "quick": quick,
+         "warm_s": {k: v["warm_s"] for k, v in fresh.items()}})
     BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    # self-verify: the append must be OBSERVABLE in the file we just
+    # wrote; a silent skip (unwritable path, serialization surprise)
+    # becomes a loud benchmark failure (benchmarks.run exits non-zero)
+    check = _read_bench()
+    hist = check.get("history", [])
+    if not hist or (rev != "unknown"
+                    and not any(h.get("rev") == rev for h in hist)):
+        raise RuntimeError(
+            f"telemetry append skipped: no history row for rev {rev} "
+            f"in {BENCH_PATH}")
     rows: list[Row] = []
     for name, e in fresh.items():
         rows.append((f"telemetry/{name}", e["warm_s"] * 1e6,

@@ -47,7 +47,8 @@ from repro.core import sim
 from repro.core.controller import PIGains, pi_init, pi_step
 from repro.core.plant import PlantProfile, plant_step
 from repro.core.policies.pi import PIPolicy
-from repro.core.workloads.schedule import Phase, PhaseSchedule
+from repro.core.workloads.schedule import Phase, PhaseSchedule, \
+    chain_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,11 +105,12 @@ _G_SETPOINT = sim._GAIN_FIELDS.index("setpoint")
 
 
 @functools.lru_cache(maxsize=None)
-def _jit_fleet(n: int, scan_len: int, budgeted: bool,
-               branches=("pi",), n_classes: int = 1):
-    """Two-level fleet run, compiled once per (fleet size, horizon bucket,
-    budgeted, policy branch set, class count) — every scalar parameter,
-    per-node plant/gain row and policy value is traced."""
+def _fleet_core(n: int, scan_len: int, budgeted: bool,
+                branches=("pi",), n_classes: int = 1):
+    """The two-level fleet run as a pure function (jitted by
+    `_jit_fleet`, vmapped over seeds by `fleet_sweep`'s executor core) —
+    every scalar parameter, per-node plant/gain row and policy value is
+    traced."""
 
     def run(profile_vals, gains_vals, policy_vals, class_ids, sched,
             budget, realloc_every, boost, steps, dt, key):
@@ -194,7 +196,33 @@ def _jit_fleet(n: int, scan_len: int, budgeted: bool,
         traces["energy_class"] = seg(nodes.plant.energy)
         return traces
 
-    return jax.jit(run)
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_fleet(n: int, scan_len: int, budgeted: bool,
+               branches=("pi",), n_classes: int = 1):
+    """One-seed fleet run, compiled once per (fleet size, horizon
+    bucket, budgeted, policy branch set, class count)."""
+    return jax.jit(_fleet_core(n, scan_len, budgeted, branches,
+                               n_classes))
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_seed_core(n: int, scan_len: int, budgeted: bool,
+                     branches=("pi",), n_classes: int = 1):
+    """Executor-facing fleet engine: the same `_fleet_core` vmapped over
+    a batch of seeds (batched = {'key': (S, 2)}), for chunked/sharded
+    multi-seed campaigns."""
+    run = _fleet_core(n, scan_len, budgeted, branches, n_classes)
+
+    def flat(batched, pv, gv, av, cls, sv, budget, realloc, boost,
+             steps, dt):
+        return jax.vmap(lambda k: run(pv, gv, av, cls, sv, budget,
+                                      realloc, boost, steps, dt, k)
+                        )(batched["key"])
+
+    return flat
 
 
 def _fleet_layout(profile, fc: FleetConfig, node_class):
@@ -253,7 +281,9 @@ def _fleet_schedules(schedules, profs, n: int, cls):
                              f"{len(profs)} (per class) or {n} (per "
                              f"node); got {len(scheds)}")
     static_hold = PhaseSchedule((Phase(1.0),))  # holds base forever
-    resolved = [(s or static_hold).resolve(profs[cls[i]])
+    per_node = [s or static_hold for s in per_node]
+    rows = max(chain_rows(len(s.phases)) for s in per_node)
+    resolved = [s.resolve(profs[cls[i]], rows)
                 for i, s in enumerate(per_node)]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *resolved)
 
@@ -280,6 +310,28 @@ def simulate_fleet(profile, fc: FleetConfig, steps: int, seed: int = 0, *,
     plus per-class power/progress/cap (and allocation, when budgeted;
     mean active phase, when scheduled) so cross-class budget shifting is
     observable; ``class_counts`` gives the node count per class."""
+    profs, cls, branches, args = _fleet_args(profile, fc, node_class,
+                                             policies, schedules)
+    scan_len = sim._bucket_steps(steps)
+    traces = _jit_fleet(fc.n_nodes, scan_len, fc.power_budget > 0,
+                        branches, len(profs))(
+        *args, jnp.float32(fc.power_budget),
+        jnp.int32(fc.reallocate_every), jnp.float32(fc.straggler_boost),
+        jnp.float32(steps), jnp.float32(fc.dt), jax.random.PRNGKey(seed))
+    # trim only the TIME axis: per-step traces are (scan_len, ...);
+    # per-run reductions like energy_class are (n_classes,) and must
+    # pass through untouched
+    out = {k: (v[:steps] if getattr(v, "ndim", 0)
+               and v.shape[0] == scan_len else v)
+           for k, v in traces.items()}
+    out["class_counts"] = np.bincount(cls, minlength=len(profs))
+    return out
+
+
+def _fleet_args(profile, fc: FleetConfig, node_class, policies,
+                schedules):
+    """Shared per-node argument packing for `simulate_fleet` /
+    `fleet_sweep`: (profs, cls, branches, (pv, gv, av, cls, sv))."""
     profs, cls = _fleet_layout(profile, fc, node_class)
     n = fc.n_nodes
     gains = [PIGains.from_model(p, fc.epsilon, fc.tau_obj) for p in profs]
@@ -297,20 +349,47 @@ def simulate_fleet(profile, fc: FleetConfig, steps: int, seed: int = 0, *,
                 p_, profs[cls[i]], gains[cls[i]], kind=k_))
         av[i] = cache[ck]
     sv = _fleet_schedules(schedules, profs, n, cls)
+    return profs, cls, branches, (jnp.asarray(pv), jnp.asarray(gv),
+                                  jnp.asarray(av),
+                                  jnp.asarray(cls, jnp.int32), sv)
 
+
+def fleet_sweep(profile, fc: FleetConfig, steps: int,
+                seeds: Sequence[int], *,
+                node_class: Optional[Sequence[int]] = None,
+                policies: Union[None, pol.Policy,
+                                Sequence[pol.Policy]] = None,
+                schedules: Union[None, PhaseSchedule,
+                                 Sequence[Optional[PhaseSchedule]]]
+                = None,
+                chunk_size: Optional[int] = None,
+                devices=None) -> dict:
+    """Multi-seed fleet campaign on the chunked/sharded executor: the
+    `simulate_fleet` engine vmapped over independent seed realizations,
+    cut into ``chunk_size`` tiles and spread over ``devices`` like any
+    `sweep` grid (`repro.core.executor`), so 30-rep fleet evaluations at
+    1024 nodes no longer need one giant batch (or one device). Returns
+    `simulate_fleet`'s traces dict with a leading seed axis on every
+    per-step series and per-run reduction."""
+    from repro.core import executor
+
+    profs, cls, branches, args = _fleet_args(profile, fc, node_class,
+                                             policies, schedules)
     scan_len = sim._bucket_steps(steps)
-    traces = _jit_fleet(n, scan_len, fc.power_budget > 0, branches,
-                        len(profs))(
-        jnp.asarray(pv), jnp.asarray(gv), jnp.asarray(av),
-        jnp.asarray(cls, jnp.int32), sv, jnp.float32(fc.power_budget),
-        jnp.int32(fc.reallocate_every), jnp.float32(fc.straggler_boost),
-        jnp.float32(steps), jnp.float32(fc.dt), jax.random.PRNGKey(seed))
-    # trim only the TIME axis: per-step traces are (scan_len, ...);
-    # per-run reductions like energy_class are (n_classes,) and must
-    # pass through untouched
-    out = {k: (v[:steps] if getattr(v, "ndim", 0)
-               and v.shape[0] == scan_len else v)
-           for k, v in traces.items()}
+    fn = _fleet_seed_core(fc.n_nodes, scan_len, fc.power_budget > 0,
+                          branches, len(profs))
+    shared = args + (jnp.float32(fc.power_budget),
+                     jnp.int32(fc.reallocate_every),
+                     jnp.float32(fc.straggler_boost),
+                     jnp.float32(steps), jnp.float32(fc.dt))
+    keys = np.stack([np.asarray(jax.random.PRNGKey(int(s)))
+                     for s in seeds])
+    merged, _ = executor.run_grid(fn, {"key": keys}, shared, len(seeds),
+                                  chunk_size=chunk_size,
+                                  devices=devices)
+    out = {k: (v[:, :steps] if getattr(v, "ndim", 0) >= 2
+               and v.shape[1] == scan_len else v)
+           for k, v in merged.items()}
     out["class_counts"] = np.bincount(cls, minlength=len(profs))
     return out
 

@@ -89,29 +89,25 @@ class OfflineRLPolicy(Policy):
 
 # ---- dataset harvesting (host-side, numpy) --------------------------------
 
-def build_dataset(traces: Dict[str, np.ndarray], profile: PlantProfile,
-                  epsilon: float, rho: float = 3.0) -> Dict[str, np.ndarray]:
-    """Transitions from closed-loop traces of ONE profile.
+def transitions_from_traces(prog, pcap, power, valid, setpoint, p_lo,
+                            p_hi, cap_lo, cap_rng, rho: float = 3.0
+                            ) -> Dict[str, np.ndarray]:
+    """(s, a, r, s') rows from trace arrays shaped (..., T), with the
+    normalizers (setpoint, power range, cap range) scalars OR per-run
+    arrays broadcasting over the leading axes — the generalization that
+    lets one call convert a heterogeneous (profile x epsilon) chunk.
+    Consecutive live steps become transitions; ``valid`` gates both
+    endpoints."""
+    prog = np.asarray(prog, np.float32)
+    pcap = np.asarray(pcap, np.float32)
+    power = np.asarray(power, np.float32)
+    valid = np.asarray(valid, bool)
+    per_run = lambda x: np.asarray(x, np.float32)[..., None]
 
-    ``traces`` holds arrays shaped (..., T) — a `sweep(...,
-    collect_traces=True)` result's traces (or one `simulate_closed_loop`
-    run's, with T only). Consecutive live steps become (s, a, r, s')
-    rows; the trace's ``valid`` mask (when present) gates both endpoints.
-    Returns flat arrays {s, a, r, s2} of equal length N.
-    """
-    prog = np.asarray(traces["progress"], np.float32)
-    pcap = np.asarray(traces["pcap"], np.float32)
-    power = np.asarray(traces["power"], np.float32)
-    valid = np.asarray(traces.get("valid", np.ones_like(prog, bool)), bool)
-
-    setpoint = (1.0 - epsilon) * profile.progress_max
-    p_lo = float(profile.power_of_pcap(profile.pcap_min))
-    p_hi = float(profile.power_of_pcap(profile.pcap_max))
-
-    s = prog / max(setpoint, 1e-9)
-    a = ((pcap - profile.pcap_min)
-         / max(profile.pcap_max - profile.pcap_min, 1e-9))
-    pw = (power - p_lo) / max(p_hi - p_lo, 1e-9)
+    s = prog / np.maximum(per_run(setpoint), 1e-9)
+    a = (pcap - per_run(cap_lo)) / np.maximum(per_run(cap_rng), 1e-9)
+    pw = ((power - per_run(p_lo))
+          / np.maximum(per_run(p_hi) - per_run(p_lo), 1e-9))
 
     # a[t] is the command computed at t and applied over period t+1, so
     # the transition is (s[t], a[t]) -> s[t+1] with the reward measured
@@ -123,6 +119,75 @@ def build_dataset(traces: Dict[str, np.ndarray], profile: PlantProfile,
     pw_n = pw[..., 1:].reshape(-1)[m]
     r = -pw_n - rho * np.maximum(0.0, 1.0 - s_n)
     return {"s": s_t, "a": a_t, "r": r.astype(np.float32), "s2": s_n}
+
+
+def build_dataset(traces: Dict[str, np.ndarray], profile: PlantProfile,
+                  epsilon: float, rho: float = 3.0) -> Dict[str, np.ndarray]:
+    """Transitions from closed-loop traces of ONE profile.
+
+    ``traces`` holds arrays shaped (..., T) — a `sweep(...,
+    collect_traces=True)` result's traces (or one `simulate_closed_loop`
+    run's, with T only). Returns flat arrays {s, a, r, s2} of equal
+    length N. For grids too large to hold in trace form, use
+    `harvest_dataset`, which streams chunks through the executor.
+    """
+    prog = np.asarray(traces["progress"], np.float32)
+    valid = traces.get("valid", np.ones_like(prog, bool))
+    return transitions_from_traces(
+        prog, traces["pcap"], traces["power"], valid,
+        (1.0 - epsilon) * profile.progress_max,
+        float(profile.power_of_pcap(profile.pcap_min)),
+        float(profile.power_of_pcap(profile.pcap_max)),
+        profile.pcap_min, profile.pcap_max - profile.pcap_min, rho)
+
+
+def harvest_dataset(profiles, epsilons, seeds, *, total_work: float,
+                    max_time: float = 3600.0, dt: float = 1.0,
+                    tau_obj: float = 10.0, rho: float = 3.0,
+                    chunk_size: int = 1024, devices=None,
+                    backend: str = "scan") -> Dict[str, np.ndarray]:
+    """Bounded-memory transition harvest over a (profiles x epsilons x
+    seeds) PI grid: the full-trace sweep streams through the chunked
+    executor (`sweep(consume=...)`) and each chunk is converted to
+    (s, a, r, s') rows on the fly — only O(chunk * T) trace memory ever
+    exists, so paper-scale training sets no longer require the whole
+    sweep's traces at once. Row order and values match concatenating
+    `build_dataset` over per-(profile, epsilon) one-shot sweeps."""
+    from repro.core import sim  # late: policies must not import sim
+
+    profs = [sim._resolve(p) for p in
+             ([profiles] if isinstance(profiles, (str, PlantProfile))
+              else profiles)]
+    eps = [float(e) for e in epsilons]
+    E, S = len(eps), len(seeds)
+    setp = np.asarray([[(1.0 - e) * p.progress_max for e in eps]
+                       for p in profs], np.float32)
+    p_lo = np.asarray([p.power_of_pcap(p.pcap_min) for p in profs],
+                      np.float32)
+    p_hi = np.asarray([p.power_of_pcap(p.pcap_max) for p in profs],
+                      np.float32)
+    cap_lo = np.asarray([p.pcap_min for p in profs], np.float32)
+    cap_rng = np.asarray([p.pcap_max - p.pcap_min for p in profs],
+                         np.float32)
+    parts: Dict[str, list] = {"s": [], "a": [], "r": [], "s2": []}
+
+    def consume(lo, hi, out):
+        traces, _final = out
+        idx = np.arange(lo, hi)
+        ip, ie = idx // (E * S), (idx // S) % E
+        d = transitions_from_traces(
+            traces["progress"], traces["pcap"], traces["power"],
+            traces["valid"], setp[ip, ie], p_lo[ip], p_hi[ip],
+            cap_lo[ip], cap_rng[ip], rho)
+        for k in parts:
+            parts[k].append(d[k])
+
+    sim.sweep(profs, eps, seeds, total_work=total_work,
+              max_time=max_time, dt=dt, tau_obj=tau_obj,
+              collect_traces=True, backend=backend,
+              chunk_size=chunk_size, devices=devices, consume=consume)
+    return {k: np.concatenate(v) if v else np.zeros((0,), np.float32)
+            for k, v in parts.items()}
 
 
 # ---- fitted Q-iteration (pure JAX) ----------------------------------------

@@ -73,7 +73,7 @@ from repro.core.workloads.detect import (DET_N_DETECT, DET_STATE_DIM,
                                          DetectorConfig, detect_init,
                                          detect_step, detector_values)
 from repro.core.workloads.schedule import (PhaseSchedule, ScheduleValues,
-                                           active_profile)
+                                           active_profile, chain_rows)
 
 logger = logging.getLogger("repro.core.sim")
 
@@ -227,7 +227,7 @@ _PI_RLS_LO, _PI_RLS_HI = PI_RLS_LO, PI_RLS_HI
 
 def _default_init(profile: PlantProfile, gains: PIGains,
                   policy=("pi",), policy_vals=None, schedule=None,
-                  det_vals=None) -> _Carry:
+                  det_vals=None, typed_pi: bool = False) -> _Carry:
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     # a scheduled run starts in its phase-0 plant (the base profile only
@@ -236,7 +236,8 @@ def _default_init(profile: PlantProfile, gains: PIGains,
                   else _unpack_profile(active_profile(schedule,
                                                       jnp.float32(0.0))[0]))
     return _Carry(plant=plant_init(plant_prof),
-                  pol=pol.branch_init(policy)(policy_vals, gains),
+                  pol=(pi_init(gains) if typed_pi
+                       else pol.branch_init(policy)(policy_vals, gains)),
                   pcap=jnp.float32(profile.pcap_max),
                   anchor_gap=jnp.float32(0.0),
                   has_anchor=jnp.array(False),
@@ -286,7 +287,7 @@ def resume_init(plant: PlantState, pi: PIState, pcap,
 def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                 total_work, max_time, dt, key, *, policy=("pi",),
                 policy_vals=None, cap_limit=None, summary_from=0.0,
-                schedule=None, detector=None):
+                schedule=None, detector=None, typed_pi: bool = False):
     """One fused control period: plant (Eq. 3) -> heartbeat median
     (Eq. 1) -> power-policy command (Eq. 4 PI by default), with
     early-exit-by-mask freezing and online summary reduction.
@@ -314,8 +315,17 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     to None, which leaves the static-profile graph byte-identical to the
     pre-phases engine.
 
+    ``typed_pi`` is the single-branch ``("pi",)`` fast path: the carried
+    policy state is a typed `PIState` (two scalars) instead of the
+    packed (POLICY_STATE_DIM,) vector, skipping the pack/unpack data
+    movement every period. Same float ops in the same order, so
+    trajectories are bit-for-bit those of the packed path (tested).
+
     Returns (new_carry, out) where out holds this period's trace row.
     """
+    if typed_pi and tuple(pol.as_branches(policy)) != ("pi",):
+        raise ValueError("typed_pi is the single-branch ('pi',) fast "
+                         f"path; got branches {pol.as_branches(policy)}")
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     if schedule is None:
@@ -343,16 +353,21 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
         det_s, detected = detect_step(detector, c.det, progress,
                                       gains.linearize(c.pcap), dt)
         # alarm -> the policy's on_change reaction (RLS covariance reset
-        # + immediate gain re-placement for adaptive PI)
-        pol_prev = jnp.where(detected,
-                             pol.branch_on_change(policy)(policy_vals,
-                                                          c.pol),
-                             c.pol)
+        # + immediate gain re-placement for adaptive PI; identity for
+        # fixed-gain PI, so the typed fast path skips the dispatch)
+        pol_prev = (c.pol if typed_pi else
+                    jnp.where(detected,
+                              pol.branch_on_change(policy)(policy_vals,
+                                                           c.pol),
+                              c.pol))
         change = detected.astype(jnp.float32)
 
-    obs = pol.PolicyObs(progress=progress, power=meas["power"], dt=dt,
-                        gains=gains, phase_change=change)
-    pol_s, pcap = pol.branch_step(policy)(policy_vals, pol_prev, obs)
+    if typed_pi:
+        pol_s, pcap = pi_step(gains, pol_prev, progress, dt)
+    else:
+        obs = pol.PolicyObs(progress=progress, power=meas["power"],
+                            dt=dt, gains=gains, phase_change=change)
+        pol_s, pcap = pol.branch_step(policy)(policy_vals, pol_prev, obs)
     if cap_limit is not None:
         pcap = jnp.minimum(pcap, cap_limit)
 
@@ -394,14 +409,15 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
         out["phase"] = jnp.where(c.done, -1, phase_idx)
     if detector is not None:
         out["phase_change"] = change
-    out.update(pol.branch_extras(policy)(pol_s))
+    if not typed_pi:
+        out.update(pol.branch_extras(policy)(pol_s))
     return _Carry(plant_s, pol_s, pcap, anchor_gap, has_anchor, t,
                   c.steps + (~c.done).astype(jnp.int32), done, summ,
                   det_s), out
 
 
 def _scan_core(max_steps: int, collect: bool = True,
-               branches=("pi",)):
+               branches=("pi",), typed_pi: bool = False):
     """Pure closed-loop run: (profile_vals, gains_vals, policy_vals,
     sched, det_vals, init|None, total_work, max_time, dt, summary_from,
     key) -> (traces|None, final_carry). The policy branch set is static
@@ -409,7 +425,9 @@ def _scan_core(max_steps: int, collect: bool = True,
     policy_vals. ``sched``/``det_vals`` are None (static plant, no
     detector — the pre-phases graph, byte-identical) or traced
     `ScheduleValues` / detector parameter vectors; jit separates the
-    variants by pytree structure."""
+    variants by pytree structure. ``typed_pi`` switches the carried
+    policy state to a typed `PIState` (single-branch ('pi',) fast path;
+    an ``init`` carry must then also hold a typed pol)."""
 
     def run(profile_vals, gains_vals, policy_vals, sched, det_vals,
             init: Optional[_Carry], total_work, max_time, dt,
@@ -417,7 +435,7 @@ def _scan_core(max_steps: int, collect: bool = True,
         profile = _unpack_profile(profile_vals)
         gains = _unpack_gains(gains_vals)
         carry0 = (_default_init(profile, gains, branches, policy_vals,
-                                sched, det_vals)
+                                sched, det_vals, typed_pi)
                   if init is None else init)
 
         def body(c: _Carry, k):
@@ -425,7 +443,8 @@ def _scan_core(max_steps: int, collect: bool = True,
                                   max_time, dt, k, policy=branches,
                                   policy_vals=policy_vals,
                                   summary_from=summary_from,
-                                  schedule=sched, detector=det_vals)
+                                  schedule=sched, detector=det_vals,
+                                  typed_pi=typed_pi)
             return c2, (out if collect else None)
 
         keys = jax.random.split(key, max_steps)
@@ -446,8 +465,9 @@ def _jit_run(max_steps: int, collect: bool = True, branches=("pi",)):
 
 @functools.lru_cache(maxsize=None)
 def _jit_sweep_cached(max_steps: int, branches, collect: bool,
-                      scheduled: bool, detected: bool):
-    run = _scan_core(max_steps, collect, branches)
+                      scheduled: bool, detected: bool,
+                      typed_pi: bool = False):
+    run = _scan_core(max_steps, collect, branches, typed_pi)
     f = lambda pv, gv, av, sv, dv, tw, mt, dt, sf, key: run(
         pv, gv, av, sv, dv, None, tw, mt, dt, sf, key)
     sched_ax = 0 if scheduled else None
@@ -463,7 +483,8 @@ def _jit_sweep_cached(max_steps: int, branches, collect: bool,
 
 
 def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
-               scheduled: bool = False, detected: bool = False):
+               scheduled: bool = False, detected: bool = False,
+               typed_pi: bool = False):
     """Vmapped grid engine. Axis nest (outer->inner): profiles, eps,
     policies, [workloads], seeds; the workload axis exists only when
     ``scheduled`` (so schedule-free sweeps keep their exact pre-phases
@@ -472,10 +493,85 @@ def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
     A plain wrapper over the lru cache so defaulted and explicit calls
     share one cache key."""
     return _jit_sweep_cached(max_steps, tuple(branches), bool(collect),
-                             bool(scheduled), bool(detected))
+                             bool(scheduled), bool(detected),
+                             bool(typed_pi))
 
 
 _jit_sweep.cache_info = _jit_sweep_cached.cache_info
+
+
+# ---- executor backends (chunked / sharded / donated grids) ----------------
+
+@functools.lru_cache(maxsize=None)
+def _flat_core(max_steps: int, branches, collect: bool, scheduled: bool,
+               detected: bool, typed_pi: bool = False):
+    """Flat-grid engine for the executor: ONE vmap over per-run rows
+    (a dict of (N, ...) leaves) instead of the one-shot nest. Every
+    run's parameters and key ride in its own row, so ANY slice of the
+    flattened grid computes identical per-run results — which is what
+    makes chunked/sharded == one-shot exact."""
+    run = _scan_core(max_steps, collect, branches, typed_pi)
+
+    def flat(batched, total_work, max_time, dt, summary_from):
+        def one(b):
+            return run(b["prof"], b["gains"], b["pvals"],
+                       b.get("sched"), b.get("det"), None,
+                       total_work, max_time, dt, summary_from,
+                       b["key"])
+
+        return jax.vmap(one)(batched)
+
+    return flat
+
+
+@functools.lru_cache(maxsize=None)
+def _flat_core_pallas(collect: bool, block_b: int = 128,
+                      chunk_t: int = 64, use_ref: bool = False):
+    """The Pallas closed-loop mega-kernel (`repro.kernels.closed_loop`)
+    as a flat-grid engine — fixed-gain PI, static plant, no detector;
+    `sweep` dispatches here only when the grid fits those capabilities.
+    The op jits internally around static shapes, so the executor runs
+    it with wrap='none'. ``use_ref=True`` swaps in the kernel package's
+    jnp oracle (same contract, no Pallas) for A/B tests."""
+    from repro.kernels.closed_loop.ops import closed_loop_sim
+
+    def flat(batched, total_work, max_time, dt, summary_from):
+        traces, fin = closed_loop_sim(
+            batched["prof"], batched["gains"], batched["key"],
+            total_work=float(total_work), max_time=float(max_time),
+            dt=float(dt), summary_from=float(summary_from),
+            collect=collect, block_b=block_b, chunk_t=chunk_t,
+            use_ref=use_ref)
+        if traces is not None:
+            traces = {k: v.T for k, v in traces.items()}
+            traces["valid"] = traces["valid"] > 0.5
+        return traces, fin
+
+    return flat
+
+
+def _carry_from_kernel_final(f: Dict[str, np.ndarray]) -> _Carry:
+    """Kernel-final dict (`closed_loop.ref` layout, any leading shape)
+    -> the engine's `_Carry`, so both backends share one summary /
+    SweepResult assembly (the packed PI slots and branch tag are
+    restored, like a scan run's final carry)."""
+    vec = np.zeros(f["t"].shape + (pol.POLICY_STATE_DIM,), np.float32)
+    vec[..., 0] = f["prev_error"]
+    vec[..., 1] = f["prev_pcap_l"]
+    vec[..., pol.BRANCH_TAG_SLOT] = float(pol.branch_tag("pi"))
+    return _Carry(
+        plant=PlantState(progress_l=f["progress_l"],
+                         dropped=f["dropped"] > 0,
+                         energy=f["energy"], work=f["work"]),
+        pol=vec, pcap=f["pcap"], anchor_gap=f["anchor_gap"],
+        has_anchor=f["has_anchor"] > 0, t=f["t"],
+        steps=f["steps"].astype(np.int32), done=f["done"] > 0,
+        summ=_Summary(count=f["count"], progress_sum=f["progress_sum"],
+                      progress_sq_sum=f["progress_sq_sum"],
+                      power_sum=f["power_sum"],
+                      progress_hist=f["progress_hist"],
+                      pcap_hist=f["pcap_hist"]),
+        det=None)
 
 
 @functools.lru_cache(maxsize=None)
@@ -748,50 +844,34 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                                      else np.asarray(final.det)))
 
 
-def sweep(profiles: Union[str, PlantProfile,
-                          Sequence[Union[str, PlantProfile]]],
-          epsilons: Sequence[float],
-          seeds: Sequence[int],
-          total_work: float,
-          max_time: float = 3600.0,
-          dt: float = 1.0,
-          tau_obj: float = 10.0,
-          adaptive: Union[None, RLSConfig, Sequence[RLSConfig]] = None,
-          policies: Union[None, pol.Policy, Sequence[pol.Policy]] = None,
-          collect_traces: bool = True,
-          summary_warmup: int = 0,
-          workloads: Union[None, PhaseSchedule,
-                           Sequence[PhaseSchedule]] = None,
-          detector: Optional[DetectorConfig] = None) -> SweepResult:
-    """Vmapped closed-loop grid: profiles x epsilons [x policies]
-    [x workloads] x seeds, one compile.
-
-    The compiled function is cached by scan length, mode and the POLICY
-    BRANCH SET only — plant, gain and policy hyperparameters are all
-    traced — so repeated sweeps over different profiles, epsilon grids,
-    RLS hyperparameter grids or policy weight sets reuse the same
-    executable; a heterogeneous ``policies=[PIPolicy(...),
-    OfflineRLPolicy(...), DutyCyclePolicy(...)]`` list runs through one
-    `lax.switch`-dispatched engine, one compile per scan-length bucket.
-
-    Pass `policies=` a single Policy (axis squeezed) or a sequence
-    (inserts an A axis between epsilons and seeds); `adaptive=` is sugar
-    for ``policies=[PIPolicy(adaptive=cfg) for cfg in ...]`` with the
-    same squeeze semantics (a profile-dependent policy's `values` are
-    built at the epsilon[0] design point — the PI-RLS values only use
-    the epsilon-independent k_i). `collect_traces=False` switches to the
-    O(grid)-memory summary mode for very large grids. `summary_warmup`
-    excludes each run's first steps (the descent transient) from the
-    online summary reductions only.
-
-    Pass `workloads=` a single `PhaseSchedule` (axis squeezed) or a
-    sequence (inserts a W axis between policies and seeds): each
-    schedule resolves against EVERY profile on the profile axis (its
-    deltas/scales script that profile's plant over time), and phased
-    grids share one compiled engine per scan-length bucket — the
-    schedule arrays are traced. `detector=` runs the change-point
-    detector in every run (design model = each profile);
-    `SweepResult.detections` then carries per-run alarm counts."""
+def _sweep_impl(profiles: Union[str, PlantProfile,
+                                Sequence[Union[str, PlantProfile]]],
+                epsilons: Sequence[float],
+                seeds: Sequence[int],
+                total_work: float,
+                max_time: float = 3600.0,
+                dt: float = 1.0,
+                tau_obj: float = 10.0,
+                adaptive: Union[None, RLSConfig,
+                                Sequence[RLSConfig]] = None,
+                policies: Union[None, pol.Policy,
+                                Sequence[pol.Policy]] = None,
+                collect_traces: bool = True,
+                summary_warmup: int = 0,
+                workloads: Union[None, PhaseSchedule,
+                                 Sequence[PhaseSchedule]] = None,
+                detector: Optional[DetectorConfig] = None,
+                backend: str = "scan",
+                chunk_size: Optional[int] = None,
+                devices=None,
+                typed_pi: bool = False,
+                consume=None,
+                state=None,
+                stop_after: Optional[int] = None):
+    """Shared implementation behind `sweep` / `sweep_resumable`:
+    normalizes the grid, then runs it one-shot (the legacy exact path)
+    or through `repro.core.executor`. Returns (SweepResult | None,
+    ExecState | None)."""
     single = isinstance(profiles, (str, PlantProfile))
     profs = [_resolve(p) for p in ([profiles] if single else profiles)]
     eps = [float(e) for e in epsilons]
@@ -838,20 +918,96 @@ def sweep(profiles: Union[str, PlantProfile,
         if not wls:
             raise ValueError("workloads= needs at least one "
                              "PhaseSchedule")
-        # schedule leaves stacked (P, W, ...): resolved per profile
+        # schedule leaves stacked (P, W, ...): resolved per profile, all
+        # packed to the grid's common row count (piecewise chaining
+        # keeps long scripts in whole 16-row pieces)
+        rows = max(chain_rows(len(w.phases)) for w in wls)
         sv = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs),
             *[jax.tree_util.tree_map(lambda *ws: jnp.stack(ws),
-                                     *[w.resolve(p) for w in wls])
+                                     *[w.resolve(p, rows) for w in wls])
               for p in profs])
     dv = (None if detector is None
           else jnp.stack([detector_values(detector, p) for p in profs]))
+    if typed_pi and branches != ("pi",):
+        raise ValueError("typed_pi= is the single-branch fixed-gain PI "
+                         f"fast path; this grid dispatches {branches}")
+    if backend not in ("scan", "pallas", "auto"):
+        raise ValueError(f"unknown backend {backend!r}; choose "
+                         "'scan', 'pallas' or 'auto'")
+    pallas_ok = branches == ("pi",) and sv is None and dv is None
+    if backend == "auto":
+        # capability dispatch: the mega-kernel covers the flagship
+        # fixed-gain PI path and pays off where it lowers natively; the
+        # interpreted kernel is for correctness work, not speed
+        backend = ("pallas" if pallas_ok
+                   and jax.default_backend() == "tpu" else "scan")
+    elif backend == "pallas" and not pallas_ok:
+        raise ValueError(
+            "backend='pallas' covers the fixed-gain PI path only "
+            "(static plant, no detector); this grid needs branches="
+            f"{branches}, workloads={sv is not None}, detector="
+            f"{dv is not None} — use backend='scan'")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
-    traces, final = _jit_sweep(max_steps, branches, collect_traces,
-                               sv is not None, dv is not None)(
-        pv, gv, av, sv, dv, jnp.float32(total_work),
-        jnp.float32(max_time), jnp.float32(dt),
-        jnp.float32(summary_warmup), keys)
+    use_exec = (backend != "scan" or chunk_size is not None
+                or devices is not None or consume is not None
+                or state is not None or stop_after is not None)
+    exec_state = None
+    if not use_exec:
+        traces, final = _jit_sweep(max_steps, branches, collect_traces,
+                                   sv is not None, dv is not None,
+                                   typed_pi)(
+            pv, gv, av, sv, dv, jnp.float32(total_work),
+            jnp.float32(max_time), jnp.float32(dt),
+            jnp.float32(summary_warmup), keys)
+    else:
+        from repro.core import executor
+        P, E, A, S = len(profs), len(eps), len(pls), len(seeds)
+        W = (1 if sv is None
+             else jax.tree_util.tree_leaves(sv)[0].shape[1])
+        shape5 = (P, E, A, W, S)
+        n_runs = int(np.prod(shape5))
+        # flatten the grid to per-run rows (grid-nest order, so the
+        # merged leading axis reshapes straight back to (P,E,A,[W],S))
+        ip, ie, ia, iw, is_ = np.indices(shape5).reshape(5, n_runs)
+        batched = {"prof": np.asarray(pv)[ip],
+                   "gains": np.asarray(gv)[ip, ie],
+                   "pvals": np.asarray(av)[ip, ia],
+                   "key": np.asarray(keys)[is_]}
+        if sv is not None:
+            batched["sched"] = jax.tree_util.tree_map(
+                lambda x: np.asarray(x)[ip, iw], sv)
+        if dv is not None:
+            batched["det"] = np.asarray(dv)[ip]
+        if backend == "pallas":
+            if executor.resolve_devices(devices):
+                logger.warning("backend='pallas' runs single-device; "
+                               "ignoring devices=%r", devices)
+                devices = None
+            fn = _flat_core_pallas(collect_traces)
+            shared = (float(total_work), float(max_time), float(dt),
+                      float(summary_warmup))
+            wrap = "none"
+        else:
+            fn = _flat_core(max_steps, branches, collect_traces,
+                            sv is not None, dv is not None, typed_pi)
+            shared = (jnp.float32(total_work), jnp.float32(max_time),
+                      jnp.float32(dt), jnp.float32(summary_warmup))
+            wrap = "jit"
+        merged, exec_state = executor.run_grid(
+            fn, batched, shared, n_runs, chunk_size=chunk_size,
+            devices=devices, wrap=wrap, consume=consume, state=state,
+            stop_after=stop_after)
+        if merged is None:  # consume hook ran, or stop_after cut short
+            return None, exec_state
+        traces, final = merged
+        if backend == "pallas":
+            final = _carry_from_kernel_final(final)
+        out_shape = (P, E, A) + ((W,) if sv is not None else ()) + (S,)
+        reshape = lambda x: x.reshape(out_shape + x.shape[1:])
+        traces = (None if traces is None
+                  else jax.tree_util.tree_map(reshape, traces))
+        final = jax.tree_util.tree_map(reshape, final)
     edges = {k: np.stack([_hist_edges(p)[k] for p in profs])
              for k in ("progress_edges", "pcap_edges")}
     summary = _summary_dict(final, edges)
@@ -880,7 +1036,95 @@ def sweep(profiles: Union[str, PlantProfile,
                        n_steps=final.steps,
                        summary=summary,
                        detections=(None if final.det is None
-                                   else final.det[..., DET_N_DETECT]))
+                                   else final.det[..., DET_N_DETECT])
+                       ), exec_state
+
+
+def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
+          dt=1.0, tau_obj=10.0, adaptive=None, policies=None,
+          collect_traces=True, summary_warmup=0, workloads=None,
+          detector=None, *, backend: str = "scan",
+          chunk_size: Optional[int] = None, devices=None,
+          typed_pi: bool = False, consume=None
+          ) -> Optional[SweepResult]:
+    """Vmapped closed-loop grid: profiles x epsilons [x policies]
+    [x workloads] x seeds.
+
+    The compiled function is cached by scan length, mode and the POLICY
+    BRANCH SET only — plant, gain and policy hyperparameters are all
+    traced — so repeated sweeps over different profiles, epsilon grids,
+    RLS hyperparameter grids or policy weight sets reuse the same
+    executable; a heterogeneous ``policies=[PIPolicy(...),
+    OfflineRLPolicy(...), DutyCyclePolicy(...)]`` list runs through one
+    `lax.switch`-dispatched engine, one compile per scan-length bucket.
+
+    Pass `policies=` a single Policy (axis squeezed) or a sequence
+    (inserts an A axis between epsilons and seeds); `adaptive=` is sugar
+    for ``policies=[PIPolicy(adaptive=cfg) for cfg in ...]`` with the
+    same squeeze semantics (a profile-dependent policy's `values` are
+    built at the epsilon[0] design point — the PI-RLS values only use
+    the epsilon-independent k_i). `collect_traces=False` switches to the
+    O(grid)-memory summary mode for very large grids. `summary_warmup`
+    excludes each run's first steps (the descent transient) from the
+    online summary reductions only.
+
+    Pass `workloads=` a single `PhaseSchedule` (axis squeezed) or a
+    sequence (inserts a W axis between policies and seeds): each
+    schedule resolves against EVERY profile on the profile axis (its
+    deltas/scales script that profile's plant over time), and phased
+    grids share one compiled engine per scan-length bucket — the
+    schedule arrays are traced. `detector=` runs the change-point
+    detector in every run (design model = each profile);
+    `SweepResult.detections` then carries per-run alarm counts.
+
+    Execution layer (`repro.core.executor`): with every keyword at its
+    default the grid runs ONE-SHOT on the legacy nested-vmap engine —
+    bit-for-bit the pre-executor `sweep`. ``chunk_size=`` cuts the
+    flattened grid into bounded-memory tiles (buffer donation between
+    tiles, streaming merge on host — a 1M-run summary grid no longer
+    has to fit in one vmap); ``devices=`` ("all", an int, or a device
+    list) shards tiles across devices via pmap with a single-device
+    fallback; per-run results are identical in every configuration
+    because each run's parameters and RNG stream ride in its own row.
+    ``backend="pallas"`` dispatches to the fused closed-loop Pallas
+    mega-kernel (`repro.kernels.closed_loop`; fixed-gain PI, static
+    plant, no detector — same model, its own per-run noise stream);
+    ``backend="auto"`` picks the kernel when the grid is capable and
+    the backend lowers it natively (TPU), else scan. ``typed_pi=``
+    switches the single-branch PI engine to the typed-PIState carry
+    (bit-for-bit the packed path; kept as a measured fast-path toggle).
+    ``consume=`` streams per-chunk results to a callback ``consume(lo,
+    hi, (traces, final))`` instead of accumulating them (the offline-RL
+    dataset harvester) — `sweep` then returns None.
+    """
+    res, _ = _sweep_impl(profiles, epsilons, seeds, total_work,
+                         max_time, dt, tau_obj, adaptive, policies,
+                         collect_traces, summary_warmup, workloads,
+                         detector, backend=backend,
+                         chunk_size=chunk_size, devices=devices,
+                         typed_pi=typed_pi, consume=consume)
+    return res
+
+
+def sweep_resumable(profiles, epsilons, seeds, total_work,
+                    max_time=3600.0, dt=1.0, tau_obj=10.0,
+                    adaptive=None, policies=None, collect_traces=True,
+                    summary_warmup=0, workloads=None, detector=None, *,
+                    backend: str = "scan", chunk_size: int,
+                    devices=None, typed_pi: bool = False, state=None,
+                    stop_after: Optional[int] = None):
+    """Chunked sweep that can stop and resume ACROSS chunk boundaries:
+    returns (SweepResult | None, `executor.ExecState`). ``stop_after=``
+    processes at most that many chunks per call (result is None until
+    the grid completes); pass the returned state — plain numpy, it
+    pickles — back via ``state=`` to continue where the previous call
+    (or process) left off. Same grid semantics as `sweep`."""
+    return _sweep_impl(profiles, epsilons, seeds, total_work, max_time,
+                       dt, tau_obj, adaptive, policies, collect_traces,
+                       summary_warmup, workloads, detector,
+                       backend=backend, chunk_size=chunk_size,
+                       devices=devices, typed_pi=typed_pi, state=state,
+                       stop_after=stop_after)
 
 
 @functools.lru_cache(maxsize=None)

@@ -19,13 +19,14 @@ from repro.core.workloads.detect import (DET_PARAM_FIELDS, DET_STATE_DIM,
                                          detect_step, detector_values)
 from repro.core.workloads.schedule import (MAX_PHASES, Phase, PhaseSchedule,
                                            ScheduleValues, active_profile,
-                                           markov_schedule,
+                                           chain_rows, markov_schedule,
                                            roofline_schedule,
                                            stream_dgemm_schedule)
 
 __all__ = [
     "MAX_PHASES", "Phase", "PhaseSchedule", "ScheduleValues",
-    "active_profile", "markov_schedule", "roofline_schedule",
-    "stream_dgemm_schedule", "DET_PARAM_FIELDS", "DET_STATE_DIM",
-    "DetectorConfig", "detect_init", "detect_step", "detector_values",
+    "active_profile", "chain_rows", "markov_schedule",
+    "roofline_schedule", "stream_dgemm_schedule", "DET_PARAM_FIELDS",
+    "DET_STATE_DIM", "DetectorConfig", "detect_init", "detect_step",
+    "detector_values",
 ]

@@ -39,11 +39,23 @@ import numpy as np
 from repro.core.phases import knee_for_saturation, profile_for_cell
 from repro.core.plant import PROFILE_FIELDS, PROFILES, PlantProfile
 
-# Fixed row count of the packed schedule arrays: every schedule traces to
-# the same shapes, so heterogeneous schedule grids share one engine.
+# Piece size of the packed schedule arrays: schedules pack into a WHOLE
+# number of MAX_PHASES-row pieces (16 rows covers every paper scenario
+# in one piece; longer scripts chain further pieces — `chain_rows`), so
+# heterogeneous schedule grids share one engine per row-count bucket.
 MAX_PHASES = 16
 
 _N_FIELDS = len(PROFILE_FIELDS)
+
+
+def chain_rows(n_phases: int) -> int:
+    """Packed row count for an n-phase schedule: the smallest whole
+    number of MAX_PHASES-row pieces that holds it. Scripts up to 16
+    phases keep their original single-piece (16-row) shapes — and the
+    compiled engines those shapes key; longer scripts chain 32, 48, ...
+    row variants (a new scan-engine structure per bucket, shared by
+    every schedule in that bucket)."""
+    return MAX_PHASES * max(1, -(-n_phases // MAX_PHASES))
 
 
 class ScheduleValues(NamedTuple):
@@ -52,9 +64,11 @@ class ScheduleValues(NamedTuple):
     ``ends`` is the cumulative end time of each phase (+inf padding past
     the last scripted phase); ``profiles`` the per-phase plant rows in
     `PROFILE_FIELDS` order (padding repeats the last row); ``period`` the
-    cycle length in seconds, 0 for non-cyclic schedules."""
-    ends: jnp.ndarray      # (MAX_PHASES,) f32
-    profiles: jnp.ndarray  # (MAX_PHASES, len(PROFILE_FIELDS)) f32
+    cycle length in seconds, 0 for non-cyclic schedules. ``rows`` is
+    `chain_rows` of the phase count — every schedule in one grid packs
+    to a common row count (`PhaseSchedule.resolve(rows=...)`)."""
+    ends: jnp.ndarray      # (rows,) f32
+    profiles: jnp.ndarray  # (rows, len(PROFILE_FIELDS)) f32
     period: jnp.ndarray    # f32 scalar; 0 = hold the last phase forever
 
 
@@ -66,7 +80,7 @@ def active_profile(sched: ScheduleValues, t):
     t_eff = jnp.where(sched.period > 0,
                       jnp.mod(t, jnp.maximum(sched.period, 1e-9)), t)
     idx = jnp.clip(jnp.searchsorted(sched.ends, t_eff, side="right"),
-                   0, MAX_PHASES - 1)
+                   0, sched.ends.shape[-1] - 1)
     return sched.profiles[idx], idx
 
 
@@ -121,9 +135,6 @@ class PhaseSchedule:
         object.__setattr__(self, "phases", tuple(self.phases))
         if not self.phases:
             raise ValueError("a PhaseSchedule needs at least one phase")
-        if len(self.phases) > MAX_PHASES:
-            raise ValueError(f"schedules pack into {MAX_PHASES} traced "
-                             f"rows; got {len(self.phases)} phases")
 
     @property
     def duration(self) -> float:
@@ -133,23 +144,36 @@ class PhaseSchedule:
         """Scripted phase-change times within one cycle (test helper)."""
         return np.cumsum([p.duration for p in self.phases[:-1]])
 
-    def resolve(self, base: Union[str, PlantProfile]) -> ScheduleValues:
-        """Pack against a base profile -> engine-facing traced arrays."""
+    def resolve(self, base: Union[str, PlantProfile],
+                rows: Optional[int] = None) -> ScheduleValues:
+        """Pack against a base profile -> engine-facing traced arrays.
+
+        ``rows`` overrides the packed row count (must be a whole number
+        of MAX_PHASES pieces >= the phase count): grids stacking short
+        and long schedules pass the common `chain_rows` maximum so every
+        leaf shares one traced shape. Scripts longer than one piece —
+        e.g. a 40-phase cyclic chain — pack by PIECEWISE CHAINING into
+        ceil(n/16) pieces instead of raising; the engine's gather is
+        row-count agnostic."""
         base = PROFILES[base] if isinstance(base, str) else base
         n = len(self.phases)
-        ends = np.full((MAX_PHASES,), np.inf, np.float32)
+        n_rows = chain_rows(n) if rows is None else int(rows)
+        if n_rows < n or n_rows % MAX_PHASES:
+            raise ValueError(f"rows={n_rows} cannot hold {n} phases in "
+                             f"whole {MAX_PHASES}-row pieces")
+        ends = np.full((n_rows,), np.inf, np.float32)
         ends[:n] = np.cumsum([p.duration for p in self.phases])
-        rows = np.zeros((MAX_PHASES, _N_FIELDS), np.float32)
+        rows_ = np.zeros((n_rows, _N_FIELDS), np.float32)
         for i, ph in enumerate(self.phases):
-            rows[i] = _profile_row(ph.resolve(base))
-        rows[n:] = rows[n - 1]
+            rows_[i] = _profile_row(ph.resolve(base))
+        rows_[n:] = rows_[n - 1]
         if self.cyclic:
             period = float(ends[n - 1])
         else:
             period = 0.0
             ends[n - 1] = np.inf  # hold the last phase forever
         return ScheduleValues(ends=jnp.asarray(ends),
-                              profiles=jnp.asarray(rows),
+                              profiles=jnp.asarray(rows_),
                               period=jnp.float32(period))
 
 
@@ -207,8 +231,6 @@ def markov_schedule(seed: int, base: Union[str, PlantProfile] = "gros",
     if states is None:
         states = [knee_for_saturation(base, s) for s in
                   (STREAM_SAT, 1.0, DGEMM_SAT)]
-    if n_phases > MAX_PHASES:
-        raise ValueError(f"n_phases must be <= {MAX_PHASES}")
     rng = np.random.default_rng(seed)
     cur = int(rng.integers(len(states)))
     phases = []

@@ -1,0 +1,7 @@
+"""Fused closed-loop simulation kernel (see kernel.py for the fusion
+story, ref.py for the engine-transcription oracle and the externalized
+noise contract, ops.py for the public `closed_loop_sim` entry)."""
+from repro.kernels.closed_loop.ops import closed_loop_sim, draw_noise
+from repro.kernels.closed_loop.ref import closed_loop_ref
+
+__all__ = ["closed_loop_sim", "closed_loop_ref", "draw_noise"]

@@ -322,6 +322,30 @@ def test_resume_init_policy_state_continues_non_pi_policy():
     assert ok.rls_state is not None
 
 
+def test_typed_pi_fast_path_bit_for_bit():
+    """The typed-PIState carry (single-branch PI fast path) performs the
+    same float ops in the same order as the packed-vector path — sweeps
+    must agree bit-for-bit in both trace and summary mode."""
+    kw = dict(total_work=500.0, max_time=400.0)
+    packed = sweep(["gros", "dahu"], [0.1, 0.3], range(2), **kw)
+    typed = sweep(["gros", "dahu"], [0.1, 0.3], range(2), typed_pi=True,
+                  **kw)
+    for k in packed.traces:
+        np.testing.assert_array_equal(np.asarray(packed.traces[k]),
+                                      np.asarray(typed.traces[k]),
+                                      err_msg=k)
+    ps = sweep("gros", [0.1], range(2), collect_traces=False, **kw)
+    ts = sweep("gros", [0.1], range(2), collect_traces=False,
+               typed_pi=True, **kw)
+    np.testing.assert_array_equal(np.asarray(ps.summary["progress_hist"]),
+                                  np.asarray(ts.summary["progress_hist"]))
+    # the fast path refuses grids it cannot represent
+    from repro.core.adaptive import RLSConfig
+    with pytest.raises(ValueError, match="typed_pi"):
+        sweep("gros", [0.1], [0], total_work=100.0,
+              adaptive=RLSConfig(), typed_pi=True)
+
+
 def test_replay_model_matches_reference_loop():
     p = PROFILES["dahu"]
     sched = np.concatenate([np.full(20, 60.0), np.full(20, 110.0)])

@@ -1,0 +1,50 @@
+"""Benchmark telemetry plumbing (benchmarks/telemetry.py): the history
+trajectory must dedupe per git rev, and entry merging must not clobber
+other modules' entries."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import telemetry  # noqa: E402
+
+
+def test_merge_history_dedupes_per_rev():
+    h0 = [{"rev": "aaa", "quick": True, "warm_s": {"x": 1.0}},
+          {"rev": "bbb", "quick": True, "warm_s": {"x": 2.0}}]
+    # same (rev, mode) replaces IN PLACE (trajectory position kept)
+    h1 = telemetry._merge_history(h0, {"rev": "bbb", "quick": True,
+                                       "warm_s": {"x": 9.0}})
+    assert [r["rev"] for r in h1] == ["aaa", "bbb"]
+    assert h1[1]["warm_s"]["x"] == 9.0
+    # a new rev appends
+    h2 = telemetry._merge_history(h1, {"rev": "ccc", "quick": True,
+                                       "warm_s": {"x": 3.0}})
+    assert [r["rev"] for r in h2] == ["aaa", "bbb", "ccc"]
+    # a quick re-run must NOT clobber the commit's archived full row
+    h2f = telemetry._merge_history(h2, {"rev": "ccc", "quick": False,
+                                        "warm_s": {"x": 30.0}})
+    assert len(h2f) == 4 and h2f[-1]["quick"] is False
+    assert h2f[2]["warm_s"]["x"] == 3.0
+    # unknown revs never collapse into each other
+    h3 = telemetry._merge_history([{"rev": "unknown", "n": 1}],
+                                  {"rev": "unknown", "n": 2})
+    assert len(h3) == 2
+    # the cap still binds
+    long = [{"rev": f"r{i}"} for i in range(60)]
+    h4 = telemetry._merge_history(long, {"rev": "new"}, cap=50)
+    assert len(h4) == 50 and h4[-1]["rev"] == "new"
+
+
+def test_append_entry_merges_without_clobbering(tmp_path, monkeypatch):
+    path = tmp_path / "BENCH_sim.json"
+    monkeypatch.setattr(telemetry, "BENCH_PATH", path)
+    telemetry.append_entry("policy_faceoff", {"warm_s": 1.0})
+    telemetry.append_entry("fig8", {"warm_s": 2.0})
+    data = json.loads(path.read_text())
+    assert set(data["entries"]) == {"policy_faceoff", "fig8"}
+    telemetry.append_entry("fig8", {"warm_s": 3.0})
+    data = json.loads(path.read_text())
+    assert data["entries"]["fig8"]["warm_s"] == 3.0
+    assert data["entries"]["policy_faceoff"]["warm_s"] == 1.0

@@ -72,12 +72,52 @@ def test_active_profile_half_open_and_cyclic():
 def test_schedule_validation():
     with pytest.raises(ValueError, match="at least one phase"):
         PhaseSchedule(())
-    with pytest.raises(ValueError, match="traced rows"):
-        PhaseSchedule(tuple(Phase(1.0) for _ in range(MAX_PHASES + 1)))
+    # > MAX_PHASES no longer raises: the script packs by piecewise
+    # chaining into whole 16-row pieces
+    long = PhaseSchedule(tuple(Phase(1.0) for _ in range(MAX_PHASES + 1)))
+    sv = long.resolve(PROFILES["gros"])
+    assert sv.ends.shape == (2 * MAX_PHASES,)
+    assert sv.profiles.shape == (2 * MAX_PHASES, len(PROFILE_FIELDS))
+    # ... but a rows= override that cannot hold the script still does
+    with pytest.raises(ValueError, match="pieces"):
+        long.resolve(PROFILES["gros"], rows=MAX_PHASES)
     with pytest.raises(ValueError, match="positive"):
         Phase(0.0)
     with pytest.raises(ValueError, match="unknown plant field"):
         Phase(1.0, delta={"nope": 1.0})
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 999), n_phases=st.integers(17, 26))
+def test_long_cyclic_schedule_matches_unrolled_reference(seed, n_phases):
+    """Piecewise-chained cyclic schedules (> MAX_PHASES phases) must run
+    exactly like the same script unrolled flat across the horizon:
+    same plant trajectory, phase index wrapping modulo the cycle."""
+    base = PROFILES["gros"]
+    chain = markov_schedule(seed, base, n_phases=n_phases,
+                            mean_dwell=12.0)
+    assert len(chain.phases) > MAX_PHASES
+    cyc = PhaseSchedule(chain.phases, cyclic=True)
+    horizon = float(min(1.6 * cyc.duration, 900.0))
+    # unrolled reference: repeat the cycle flat until it covers horizon
+    flat, t = [], 0.0
+    while t < horizon:
+        ph = chain.phases[len(flat) % n_phases]
+        flat.append(ph)
+        t += ph.duration
+    unrolled = PhaseSchedule(tuple(flat))
+    a = simulate_closed_loop(base, 0.1, total_work=1e9,
+                             max_time=horizon, seed=seed, workload=cyc)
+    b = simulate_closed_loop(base, 0.1, total_work=1e9,
+                             max_time=horizon, seed=seed,
+                             workload=unrolled)
+    assert a.n_steps == b.n_steps
+    for k in ("progress", "pcap", "energy", "work"):
+        np.testing.assert_array_equal(a.traces[k], b.traces[k],
+                                      err_msg=k)
+    np.testing.assert_array_equal(np.asarray(a.traces["phase"]),
+                                  np.asarray(b.traces["phase"])
+                                  % n_phases)
 
 
 def test_generators():
