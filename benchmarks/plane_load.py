@@ -1,0 +1,93 @@
+"""Sustained-load benchmark for the multi-tenant control plane: control
+ticks/sec at 1k / 10k / 100k tenants (ISSUE 6's success metric).
+
+Each plane mixes policy kinds the way a real fleet would — fixed-gain
+PI, adaptive (RLS) PI, duty-cycle tenants, and a detector-enabled slice
+— so the measured tick is the heterogeneous ``lax.switch`` path, not
+the easy homogeneous one. Every tick ingests synthesized heartbeats for
+all tenants (the vectorized `TenantHeartbeatStore` path), aggregates
+Eq. 1 progress, and runs the jitted vmapped `plane_step`; the reported
+rate is therefore the full service loop, not just the jax call.
+
+Results land in BENCH_sim.json under ``entries.plane_load`` (via
+`telemetry.append_entry`, same hook policy_faceoff uses) keyed by
+tenant count, so the plane's scaling record rides the same
+machine-readable perf file as the sweep engines. `telemetry.collect`
+additionally times the 10k-tenant tick each run (``plane_tick_10k``) so
+the headline number accumulates in the BENCH history trajectory.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+
+COUNTS = (1_000, 10_000, 100_000)
+HEADLINE = 10_000  # the count telemetry tracks in the history trajectory
+
+
+def make_plane(n: int):
+    """A plane with ``n`` tenants in a fleet-like policy mix: ~55%
+    fixed-gain PI, 15% adaptive (RLS) PI, 15% duty-cycle, 15%
+    detector-enabled PI. Batch-registered (one row write per group)."""
+    from repro.core.adaptive import RLSConfig
+    from repro.core.plane import ControlPlane
+    from repro.core.policies import DutyCyclePolicy, PIPolicy
+
+    plane = ControlPlane(profile="gros", epsilon=0.1, dt=1.0,
+                         capacity=n, max_beats=8)
+    q = max(n * 15 // 100, 1)
+    plane.add_tenants(n - 3 * q)
+    plane.add_tenants(q, policy=PIPolicy(adaptive=RLSConfig()))
+    plane.add_tenants(q, policy=DutyCyclePolicy())
+    plane.add_tenants(q, detector=True)
+    return plane
+
+
+def drive(plane, ticks: int, beats_per_tick: int = 3):
+    """Run ``ticks`` full service periods: synthesized heartbeats for
+    every tenant (vectorized ingest), then one plane tick. Beat times
+    are evenly spread inside each period — a steady plant, so the
+    detector slice exercises its statistics without alarming."""
+    n = plane.n_tenants
+    ids = np.repeat(np.arange(n), beats_per_tick)
+    offs = (np.arange(beats_per_tick) + 1.0) / (beats_per_tick + 1.0)
+    out = None
+    for _ in range(ticks):
+        t0, dt = plane._t, plane.dt
+        times = np.broadcast_to(t0 + offs * dt,
+                                (n, beats_per_tick)).ravel()
+        plane.ingest(ids, times)
+        out = plane.tick(now=t0 + dt)
+    return out
+
+
+def run(quick: bool = True) -> List[Row]:
+    from benchmarks.telemetry import append_entry
+
+    ticks = 3 if quick else 20
+    rows: List[Row] = []
+    payload = {"quick": quick, "ticks": ticks, "counts": {}}
+    for n in COUNTS:
+        plane = make_plane(n)
+        drive(plane, 1)  # warm: compiles the (branch set, bucket) tick
+        t0 = time.time()
+        drive(plane, ticks)
+        warm = time.time() - t0
+        tps = ticks / max(warm, 1e-9)
+        payload["counts"][str(n)] = {
+            "ticks": ticks, "warm_s": round(warm, 4),
+            "ticks_per_sec": round(tps, 2),
+            "tenant_ticks_per_sec": round(tps * n, 1)}
+        rows.append((f"plane_load/tick_{n}", warm / ticks * 1e6,
+                     f"ticks_per_sec={tps:.2f};"
+                     f"tenant_ticks_per_sec={tps * n:.0f}"))
+    payload["headline_ticks_per_sec_10k"] = (
+        payload["counts"][str(HEADLINE)]["ticks_per_sec"])
+    append_entry("plane_load", payload)
+    rows.append(("plane_load/recorded", 0.0,
+                 "BENCH_sim.json:entries.plane_load"))
+    return rows

@@ -28,8 +28,8 @@ def main() -> None:
 
     from benchmarks import (beyond_adaptive, fig3_system_analysis,
                             fig4_static, fig5_dynamics, fig6_control,
-                            fig7_pareto, fig8_phases, policy_faceoff,
-                            roofline, telemetry)
+                            fig7_pareto, fig8_phases, plane_load,
+                            policy_faceoff, roofline, telemetry)
     modules = {
         "fig3": fig3_system_analysis,
         "fig4": fig4_static,
@@ -40,6 +40,7 @@ def main() -> None:
         "beyond": beyond_adaptive,
         "faceoff": policy_faceoff,
         "roofline": roofline,
+        "plane": plane_load,
         # last: times the flagship engine workloads and writes the
         # machine-readable BENCH_sim.json perf record at the repo root
         "telemetry": telemetry,

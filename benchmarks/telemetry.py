@@ -9,6 +9,9 @@ Entries (each with first-call and warm wall time plus runs/sec):
 * ``adaptive_grid``  — an RLS hyperparameter grid (eps x lambda x seeds,
   summary mode) through the adaptive scan engine.
 * ``fleet_64`` / ``fleet_1024`` — the two-level fleet run at both scales.
+* ``plane_tick_10k``  — one full multi-tenant ControlPlane service
+  period (heartbeat ingest + Eq. 1 aggregation + the vmapped control
+  tick) at 10k mixed-policy tenants; runs/sec is tenant-ticks/sec.
 * ``sweep_throughput`` — the headline metric: warm runs/sec of one
   summary-mode PI grid through each execution layout (one-shot scan,
   chunked+donated scan, typed-PI scan, chunked scan sharded over 2
@@ -81,6 +84,14 @@ def collect(quick: bool = True) -> dict:
         entries[f"fleet_{n}"] = _timed_entry(
             lambda: simulate_fleet(prof, fc, steps=60, seed=0)["power"],
             n)
+
+    # the control plane's headline: one full service period at 10k
+    # mixed-policy tenants (plane_load carries the 1k/100k scaling
+    # record; this row is what accumulates in the history trajectory)
+    from benchmarks.plane_load import HEADLINE, drive, make_plane
+    plane = make_plane(HEADLINE)
+    entries["plane_tick_10k"] = _timed_entry(
+        lambda: drive(plane, 1)["applied"], HEADLINE)
 
     entries["sweep_throughput"] = _sweep_throughput(quick)
 
@@ -224,7 +235,7 @@ def append_entry(name: str, payload: dict) -> None:
 
 
 _OWNED_PREFIXES = ("fig7_sweep", "adaptive_grid", "fleet_",
-                   "sweep_throughput")
+                   "plane_tick", "sweep_throughput")
 _HISTORY_CAP = 50
 
 

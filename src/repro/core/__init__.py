@@ -4,10 +4,14 @@ from repro.core.controller import (PIController, PIGains, PIState, pi_init,  # n
 from repro.core.identify import (StaticFit, fit_dynamics, fit_rapl,  # noqa: F401
                                  fit_static, pearson)
 from repro.core.nrm import NRM, PowerActuator, SimulatedPowerActuator  # noqa: F401
+from repro.core.plane import (ControlPlane, PlaneSnapshot,  # noqa: F401
+                              plane_step)
 from repro.core.plant import (PROFILES, PlantProfile, PlantState,  # noqa: F401
                               pcap_linearize, plant_init, plant_step,
                               simulate)
-from repro.core.signals import HeartbeatAggregator, progress_from_times  # noqa: F401
+from repro.core.signals import (HeartbeatAggregator,  # noqa: F401
+                                TenantHeartbeatStore,
+                                progress_from_times)
 from repro.core.sim import (SimResult, SweepResult, replay_model,  # noqa: F401
                             simulate_closed_loop, sweep)
 from repro.core.workloads import (DetectorConfig, Phase, PhaseSchedule,  # noqa: F401

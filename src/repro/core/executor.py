@@ -134,6 +134,13 @@ def _digest(batched: Any, shared: Tuple) -> str:
     return h.hexdigest()
 
 
+def digest(batched: Any, shared: Tuple = ()) -> str:
+    """Public content hash of a (batched, shared) grid — also the
+    fingerprint `repro.core.plane` stamps on plane snapshots so a
+    modified/corrupted snapshot is rejected instead of resumed."""
+    return _digest(batched, shared)
+
+
 def _pad_rows(x, pad: int):
     """Pad a chunk slice to full size — ALWAYS copying. The chunk input
     must own its memory: device transfer of a host array can be

@@ -101,8 +101,8 @@ class NRM:
         self.hb = HeartbeatAggregator()
         self.records: List[ControlRecord] = []
         self._t = 0.0
-        self._adaptive = None
-        self._rls_state = None  # engine-side estimator state (run_simulated)
+        self._rls_cfg = None
+        self._rls_state = None  # packed RLS estimator state (both paths)
         # non-PI power policy (repro.core.policies); its packed state is
         # threaded across run_simulated calls like the RLS estimator's
         self._policy = policy
@@ -123,11 +123,8 @@ class NRM:
             raise ValueError("policy= replaces the PI controller; "
                              "adaptive RLS only schedules PI gains")
         if pc_cfg.adaptive:
-            from repro.core.adaptive import RLSAdapter, RLSConfig
-            self._adaptive = RLSAdapter(self.gains, self.profile)
-            self._rls_cfg = RLSConfig(lam=self._adaptive.lam,
-                                      dwell=self._adaptive.dwell,
-                                      kl_clamp=self._adaptive.kl_clamp)
+            from repro.core.adaptive import RLSConfig
+            self._rls_cfg = RLSConfig()
 
     # ---- workload-facing API ---------------------------------------------
     def heartbeat(self, work: float = 1.0, t: Optional[float] = None) -> None:
@@ -154,31 +151,37 @@ class NRM:
         self._policy_vals = None
 
     # ---- control loop -----------------------------------------------------
-    def _detect(self, progress: float, dt: float) -> bool:
-        """One live detector period (no-op without detector=). The model
-        replays the cap that was APPLIED over the window just measured."""
+    def _det_pack(self):
+        """Lazy packed detector (vals, state) — (None, None) without
+        detector=. The model is anchored at the cap APPLIED when the
+        detector first arms."""
         if self._detector is None:
-            return False
+            return None, None
         if self._det_vals is None:
             self._det_vals = detector_values(self._detector, self.profile)
         if self._det_state is None:
             self._det_state = detect_init(self._det_vals, self.gains,
                                           self._pcap_applied)
-        self._det_state, det = detect_step(
-            self._det_vals, self._det_state, jnp.float32(progress),
-            self.gains.linearize(self._pcap_applied), jnp.float32(dt))
-        return bool(det)
+        return self._det_vals, self._det_state
 
     def control_step(self, dt: Optional[float] = None,
                      now: Optional[float] = None) -> ControlRecord:
-        """One control period, dispatched through the policy contract
-        (`policy_values/policy_init/policy_step`) for NRM(policy=...) and
-        through the stateful PI/RLS path otherwise. Pass ``now`` when an
-        external clock (the training loop's simulated time) drives the
-        schedule; dt is then derived. With detector=DetectorConfig() the
-        change-point detector runs first each period: an alarm resets
-        the RLS estimator (both paths) / fires the policy's `on_change`
-        hook, and is recorded on the ControlRecord."""
+        """One control period — a 1-tenant wrapper over
+        `repro.core.plane.plane_step`, the same control-law code path
+        the scan engine and the multi-tenant `ControlPlane` run. The
+        PI / adaptive-PI / policy= state is packed into the plane's
+        fixed-width vectors before the step and unpacked after, so the
+        live runtime and the simulator literally share one control-law
+        implementation. Pass ``now`` when an external clock (the
+        training loop's simulated time) drives the schedule; dt is then
+        derived. With detector=DetectorConfig() the change-point
+        detector runs first each period: an alarm resets the RLS
+        estimator (both paths) / fires the policy's `on_change` hook,
+        and is recorded on the ControlRecord."""
+        import dataclasses as _dc
+
+        from repro.core import plane
+        from repro.core import policies as pol
         if now is not None:
             if dt is None:
                 dt = max(now - self._t, 1e-6)
@@ -187,9 +190,8 @@ class NRM:
             dt = dt or self.cfg.sampling_period
             self._t += dt
         progress = self.hb.progress(self._t)
-        detected = self._detect(progress, dt)
+        det_vals, det_state = self._det_pack()
         if self._policy is not None:
-            from repro.core import policies as pol
             if self._policy_vals is None:
                 self._policy_vals = pol.policy_values(
                     self._policy, self.profile, self.gains)
@@ -197,30 +199,57 @@ class NRM:
             if self._policy_state is None:
                 self._policy_state = pol.policy_init(self._policy, vals,
                                                      self.gains)
-            state = self._policy_state
-            if detected:
-                state = pol.branch_on_change(self._policy)(vals, state)
             power = self.actuator.read_power()
             if not np.isfinite(power):
                 # first period: no measurement yet; the policies that
                 # read obs.power get the model's estimate instead
                 power = float(self.profile.power_of_pcap(
                     self._pcap_applied))
-            obs = pol.PolicyObs(progress=jnp.float32(progress),
-                                power=jnp.float32(power),
-                                dt=jnp.float32(dt), gains=self.gains,
-                                phase_change=jnp.float32(detected))
-            self._policy_state, pcap = pol.policy_step(
-                self._policy, vals, state, obs)
+            self._policy_state, det_s, pcap, change = plane.plane_step(
+                self.gains, self._policy, vals, self._policy_state,
+                self._pcap_applied, jnp.float32(progress),
+                jnp.float32(power), jnp.float32(dt),
+                det_vals=det_vals, det_state=det_state)
             pcap = float(pcap)
         else:
-            if detected and self._adaptive is not None:
-                self._adaptive.on_change()
-            if self._adaptive is not None:
-                self.controller.gains = self._adaptive.update(
-                    self.controller.gains, progress,
-                    float(self.controller.state.prev_pcap_l), dt)
-            pcap = self.controller.step(progress, dt)
+            # PI / adaptive-PI ride the SAME plane step, through the
+            # pi / pi_rls branches the engine dispatches (the numpy
+            # RLSAdapter mirror is gone: one estimator implementation)
+            from repro.core.adaptive import (rls_init, rls_pack,
+                                             rls_unpack, rls_values)
+            from repro.core.policies.pi import (PI_RLS_HI, PI_RLS_LO,
+                                                PIPolicy, pi_pack)
+            adaptive = self._rls_cfg is not None
+            if self._policy_vals is None:
+                self._policy_vals = pol.policy_values(
+                    PIPolicy(adaptive=self._rls_cfg), self.profile,
+                    self.gains)
+            if adaptive and self._rls_state is None:
+                self._rls_state = rls_init(
+                    rls_values(self._rls_cfg, self.profile, self.gains),
+                    self.gains.k_p, self.gains.k_i)
+            state = pi_pack(self.controller.state,
+                            None if not adaptive
+                            else rls_pack(self._rls_state))
+            branch = "pi_rls" if adaptive else "pi"
+            state, det_s, pcap, change = plane.plane_step(
+                self.controller.gains, branch, self._policy_vals, state,
+                self._pcap_applied, progress, None, dt,
+                det_vals=det_vals, det_state=det_state)
+            self.controller.state = PIState(prev_error=state[0],
+                                            prev_pcap_l=state[1])
+            if adaptive:
+                self._rls_state = rls_unpack(state[PI_RLS_LO:PI_RLS_HI])
+                # observability: the stateful controller's gains track
+                # the scheduled placement, like the adapter kept them
+                self.controller.gains = _dc.replace(
+                    self.controller.gains,
+                    k_p=float(self._rls_state.k_p),
+                    k_i=float(self._rls_state.k_i))
+            pcap = float(pcap)
+        if det_vals is not None:
+            self._det_state = det_s
+        detected = bool(float(change))
         self.actuator.set_pcap(pcap)
         self._pcap_applied = float(np.clip(pcap, self.profile.pcap_min,
                                            self.profile.pcap_max))
@@ -265,7 +294,7 @@ class NRM:
                                       self.gains),
                     self.gains)
             policy_state = self._policy_state
-        elif self._adaptive is not None:
+        elif self._rls_cfg is not None:
             kwargs = {"adaptive": self._rls_cfg, "design": self.profile}
             rls = self._rls_state
             if rls is None:  # fresh estimator around the design model
@@ -309,37 +338,35 @@ class NRM:
                 "progress": float(res.traces["progress"][-1]),
                 "pcap": res.pcap,
             }
-        if res.rls_state is not None and self._adaptive is not None:
+        if res.rls_state is not None and self._rls_cfg is not None:
             # pc_cfg.adaptive path only: an adaptive PIPolicy passed via
-            # policy= threads its estimator inside _policy_state instead
+            # policy= threads its estimator inside _policy_state instead.
+            # The SAME packed state feeds the next control_step's
+            # plane_step call — no mirror to sync
             self._rls_state = res.rls_state
-            self._sync_adapter_from_engine(res.rls_state)
+            self.controller.gains = dataclasses.replace(
+                self.controller.gains, k_p=float(res.rls_state.k_p),
+                k_i=float(res.rls_state.k_i))
         # advance the actuator's RNG past this run so a later
         # advance()-based step doesn't replay the engine's noise
         self.actuator._key = jax.random.fold_in(
             jax.random.fold_in(self.actuator._key, seed), res.n_steps)
         return res.traces
 
-    def _sync_adapter_from_engine(self, rls) -> None:
-        """Mirror the engine's final estimator into the numpy RLSAdapter
-        and the stateful controller, so a subsequent `control_step`
-        (runtime path) continues from the adapted gains/model."""
-        import dataclasses as _dc
-        a = self._adaptive
-        a.theta = np.asarray(rls.theta, np.float64)
-        a.P = np.asarray(rls.P, np.float64)
-        a.tau_hat = float(rls.tau_hat)
-        a.kl_hat = float(rls.kl_hat)
-        a._prev = (float(rls.prev_phi[0]), float(rls.prev_phi[1])) \
-            if bool(rls.has_prev) else None
-        a._since_update = int(rls.since_update)
-        self.controller.gains = _dc.replace(
-            self.controller.gains, k_p=float(rls.k_p), k_i=float(rls.k_i))
-
     def _run_simulated_python(self, total_work: float,
                               max_time: float = 3600.0,
                               seed: int = 0) -> Dict[str, np.ndarray]:
-        """Reference per-step loop (adaptive path + equivalence tests)."""
+        """Reference per-step loop (adaptive path + equivalence tests).
+
+        Deliberately does NOT go through plane_step: the numpy
+        `RLSAdapter` here is the float64 oracle the packed estimator is
+        tested against."""
+        adapter = None
+        if self._rls_cfg is not None:
+            from repro.core.adaptive import RLSAdapter
+            c = self._rls_cfg
+            adapter = RLSAdapter(self.gains, self.profile, lam=c.lam,
+                                 dwell=c.dwell, kl_clamp=c.kl_clamp)
         rng = np.random.default_rng(seed)
         dt = self.cfg.sampling_period
         traces = {"t": [], "progress": [], "pcap": [], "power": [],
@@ -354,8 +381,8 @@ class NRM:
             for i in range(n):
                 self.hb.beat(t - dt + (i + 0.5) * dt / max(n, 1))
             progress = self.hb.progress(t)
-            if self._adaptive is not None:
-                self.controller.gains = self._adaptive.update(
+            if adapter is not None:
+                self.controller.gains = adapter.update(
                     self.controller.gains, progress,
                     float(self.controller.state.prev_pcap_l), dt)
             pcap = self.controller.step(progress, dt)
@@ -388,6 +415,10 @@ class NRM:
             d["det_state"] = np.asarray(self._det_state,
                                         np.float32).tolist()
         d["pcap_applied"] = self._pcap_applied
+        # the heartbeat ring buffer IS run state: without it, the first
+        # post-restore control period sees zero progress and commands a
+        # transient the pre-kill run never saw
+        d["heartbeats"] = self.hb.state_dict()
         return d
 
     def load_state_dict(self, d: dict) -> None:
@@ -416,21 +447,23 @@ class NRM:
                            else jnp.asarray(ds, jnp.float32))
         self._pcap_applied = float(d.get("pcap_applied",
                                          self.profile.pcap_max))
+        hb = d.get("heartbeats")
+        if hb is not None:
+            self.hb.load_state_dict(hb)
         rs = d.get("rls_state")
-        if rs is not None and self._adaptive is None:
+        if rs is not None and self._rls_cfg is None:
             raise ValueError("checkpoint carries RLS estimator state but "
                              "this NRM is not adaptive; set "
                              "PowerControlConfig(adaptive=True) before "
                              "loading")
         if rs is None:
             self._rls_state = None
-            if self._adaptive is not None:
-                # rebuild the numpy mirror + design gains alongside
-                from repro.core.adaptive import RLSAdapter
-                self._adaptive = RLSAdapter(self.gains, self.profile)
+            if self._rls_cfg is not None:
+                # pre-run checkpoint: back to the design-model placement
                 self.controller.gains = self.gains
         else:
             from repro.core.adaptive import rls_unpack
             self._rls_state = rls_unpack(jnp.asarray(rs, jnp.float32))
-            if self._adaptive is not None:
-                self._sync_adapter_from_engine(self._rls_state)
+            self.controller.gains = dataclasses.replace(
+                self.controller.gains, k_p=float(self._rls_state.k_p),
+                k_i=float(self._rls_state.k_i))

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plane
 from repro.core import policies as pol
 from repro.core.adaptive import (RLSConfig, RLSState, rls_init, rls_pack,
                                  rls_unpack, rls_values)
@@ -118,11 +119,13 @@ def _bucket_steps(n: int) -> int:
     return b
 
 # Canonical packing order for traced plant / gain parameters. The plant
-# order is owned by repro.core.plant (PROFILE_FIELDS) so phase-schedule
-# rows (repro.core.workloads) pack identically.
+# order is owned by repro.core.plant (PROFILE_FIELDS); the gain order by
+# repro.core.plane (GAIN_FIELDS, shared with the control-plane service
+# tick) — re-exported here under the historical names.
 _PROFILE_FIELDS = PROFILE_FIELDS
-_GAIN_FIELDS = ("k_p", "k_i", "setpoint", "pcap_min", "pcap_max",
-                "a", "b", "alpha", "beta")
+_GAIN_FIELDS = plane.GAIN_FIELDS
+gains_values = plane.gains_values
+_unpack_gains = plane.unpack_gains
 
 # Online-summary histogram resolution. Progress bins span
 # [0, PROG_HIST_SPAN * K_L] (noise can push progress above K_L); cap bins
@@ -137,18 +140,9 @@ def profile_values(profile: PlantProfile) -> jnp.ndarray:
                        jnp.float32)
 
 
-def gains_values(gains: PIGains) -> jnp.ndarray:
-    return jnp.asarray([getattr(gains, f) for f in _GAIN_FIELDS],
-                       jnp.float32)
-
-
 def _unpack_profile(vals) -> PlantProfile:
     kw = {f: vals[i] for i, f in enumerate(_PROFILE_FIELDS)}
     return PlantProfile(name="_traced", **kw)
-
-
-def _unpack_gains(vals) -> PIGains:
-    return PIGains(**{f: vals[i] for i, f in enumerate(_GAIN_FIELDS)})
 
 
 def _resolve(profile: Union[str, PlantProfile]) -> PlantProfile:
@@ -345,29 +339,26 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                            c.anchor_gap + dt)
     has_anchor = c.has_anchor | (n > 0)
 
-    if detector is None:
-        det_s, change = c.det, jnp.float32(0.0)
-        pol_prev = c.pol
-    else:
-        # residual against the design model's replay of the APPLIED cap
-        det_s, detected = detect_step(detector, c.det, progress,
-                                      gains.linearize(c.pcap), dt)
-        # alarm -> the policy's on_change reaction (RLS covariance reset
-        # + immediate gain re-placement for adaptive PI; identity for
-        # fixed-gain PI, so the typed fast path skips the dispatch)
-        pol_prev = (c.pol if typed_pi else
-                    jnp.where(detected,
-                              pol.branch_on_change(policy)(policy_vals,
-                                                           c.pol),
-                              c.pol))
-        change = detected.astype(jnp.float32)
-
     if typed_pi:
-        pol_s, pcap = pi_step(gains, pol_prev, progress, dt)
+        # single-branch PI fast path: detector still runs (fixed-gain
+        # PI's on_change is the identity, so no dispatch is needed)
+        if detector is None:
+            det_s, change = c.det, jnp.float32(0.0)
+        else:
+            det_s, detected = detect_step(detector, c.det, progress,
+                                          gains.linearize(c.pcap), dt)
+            change = detected.astype(jnp.float32)
+        pol_s, pcap = pi_step(gains, c.pol, progress, dt)
     else:
-        obs = pol.PolicyObs(progress=progress, power=meas["power"],
-                            dt=dt, gains=gains, phase_change=change)
-        pol_s, pcap = pol.branch_step(policy)(policy_vals, pol_prev, obs)
+        # the control plane's single control-law code path: detector
+        # residual against the design model's replay of the APPLIED
+        # cap, alarm -> the policy's on_change reaction, then the
+        # policy step (repro.core.plane owns this section; the NRM
+        # runtime and the multi-tenant service tick call the same
+        # function)
+        pol_s, det_s, pcap, change = plane.plane_step(
+            gains, policy, policy_vals, c.pol, c.pcap, progress,
+            meas["power"], dt, det_vals=detector, det_state=c.det)
     if cap_limit is not None:
         pcap = jnp.minimum(pcap, cap_limit)
 
@@ -466,13 +457,18 @@ def _jit_run(max_steps: int, collect: bool = True, branches=("pi",)):
 @functools.lru_cache(maxsize=None)
 def _jit_sweep_cached(max_steps: int, branches, collect: bool,
                       scheduled: bool, detected: bool,
-                      typed_pi: bool = False):
+                      typed_pi: bool = False, det_grid: bool = False):
     run = _scan_core(max_steps, collect, branches, typed_pi)
     f = lambda pv, gv, av, sv, dv, tw, mt, dt, sf, key: run(
         pv, gv, av, sv, dv, None, tw, mt, dt, sf, key)
     sched_ax = 0 if scheduled else None
     det_ax = 0 if detected else None
     f = jax.vmap(f, in_axes=(None,) * 9 + (0,))                  # seeds
+    if det_grid:
+        # detector hyperparameter axis (threshold/min_gap/... grids),
+        # vmapped like the RLS-config axis: dv rows are per-config
+        f = jax.vmap(f, in_axes=(None, None, None, None, 0)
+                     + (None,) * 5)
     if scheduled:
         f = jax.vmap(f, in_axes=(None, None, None, 0) + (None,) * 6)
     f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 7)       # policies
@@ -484,17 +480,19 @@ def _jit_sweep_cached(max_steps: int, branches, collect: bool,
 
 def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
                scheduled: bool = False, detected: bool = False,
-               typed_pi: bool = False):
+               typed_pi: bool = False, det_grid: bool = False):
     """Vmapped grid engine. Axis nest (outer->inner): profiles, eps,
-    policies, [workloads], seeds; the workload axis exists only when
-    ``scheduled`` (so schedule-free sweeps keep their exact pre-phases
-    shapes and executables). Schedule leaves are (P, W, ...) — resolved
-    per profile; detector values are per-profile (P, DET_PARAM_DIM).
-    A plain wrapper over the lru cache so defaulted and explicit calls
-    share one cache key."""
+    policies, [workloads], [detectors], seeds; the workload/detector
+    axes exist only when ``scheduled`` / ``det_grid`` (so sweeps
+    without them keep their exact pre-existing shapes and executables).
+    Schedule leaves are (P, W, ...) — resolved per profile; detector
+    values are per-profile (P, DET_PARAM_DIM), or (P, D,
+    DET_PARAM_DIM) with a detector-config grid. A plain wrapper over
+    the lru cache so defaulted and explicit calls share one cache
+    key."""
     return _jit_sweep_cached(max_steps, tuple(branches), bool(collect),
                              bool(scheduled), bool(detected),
-                             bool(typed_pi))
+                             bool(typed_pi), bool(det_grid))
 
 
 _jit_sweep.cache_info = _jit_sweep_cached.cache_info
@@ -860,7 +858,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                 summary_warmup: int = 0,
                 workloads: Union[None, PhaseSchedule,
                                  Sequence[PhaseSchedule]] = None,
-                detector: Optional[DetectorConfig] = None,
+                detector: Union[None, DetectorConfig,
+                                Sequence[DetectorConfig]] = None,
                 backend: str = "scan",
                 chunk_size: Optional[int] = None,
                 devices=None,
@@ -927,8 +926,21 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
             *[jax.tree_util.tree_map(lambda *ws: jnp.stack(ws),
                                      *[w.resolve(p, rows) for w in wls])
               for p in profs])
-    dv = (None if detector is None
-          else jnp.stack([detector_values(detector, p) for p in profs]))
+    det_grid = (detector is not None
+                and not isinstance(detector, DetectorConfig))
+    if detector is None:
+        dv = None
+    elif det_grid:
+        det_cfgs = list(detector)
+        if not det_cfgs:
+            raise ValueError("detector= needs at least one "
+                             "DetectorConfig")
+        # detector hyperparameter grid (P, D, DET_PARAM_DIM): a new D
+        # axis between [workloads] and seeds, like the adaptive= grid
+        dv = jnp.stack([jnp.stack([detector_values(d, p)
+                                   for d in det_cfgs]) for p in profs])
+    else:
+        dv = jnp.stack([detector_values(detector, p) for p in profs])
     if typed_pi and branches != ("pi",):
         raise ValueError("typed_pi= is the single-branch fixed-gain PI "
                          f"fast path; this grid dispatches {branches}")
@@ -956,7 +968,7 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
     if not use_exec:
         traces, final = _jit_sweep(max_steps, branches, collect_traces,
                                    sv is not None, dv is not None,
-                                   typed_pi)(
+                                   typed_pi, det_grid)(
             pv, gv, av, sv, dv, jnp.float32(total_work),
             jnp.float32(max_time), jnp.float32(dt),
             jnp.float32(summary_warmup), keys)
@@ -965,11 +977,13 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         P, E, A, S = len(profs), len(eps), len(pls), len(seeds)
         W = (1 if sv is None
              else jax.tree_util.tree_leaves(sv)[0].shape[1])
-        shape5 = (P, E, A, W, S)
-        n_runs = int(np.prod(shape5))
+        D = dv.shape[1] if det_grid else 1
+        shape6 = (P, E, A, W, D, S)
+        n_runs = int(np.prod(shape6))
         # flatten the grid to per-run rows (grid-nest order, so the
-        # merged leading axis reshapes straight back to (P,E,A,[W],S))
-        ip, ie, ia, iw, is_ = np.indices(shape5).reshape(5, n_runs)
+        # merged leading axis reshapes straight back to
+        # (P,E,A,[W],[D],S))
+        ip, ie, ia, iw, idet, is_ = np.indices(shape6).reshape(6, n_runs)
         batched = {"prof": np.asarray(pv)[ip],
                    "gains": np.asarray(gv)[ip, ie],
                    "pvals": np.asarray(av)[ip, ia],
@@ -978,7 +992,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
             batched["sched"] = jax.tree_util.tree_map(
                 lambda x: np.asarray(x)[ip, iw], sv)
         if dv is not None:
-            batched["det"] = np.asarray(dv)[ip]
+            batched["det"] = (np.asarray(dv)[ip, idet] if det_grid
+                              else np.asarray(dv)[ip])
         if backend == "pallas":
             if executor.resolve_devices(devices):
                 logger.warning("backend='pallas' runs single-device; "
@@ -1003,7 +1018,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         traces, final = merged
         if backend == "pallas":
             final = _carry_from_kernel_final(final)
-        out_shape = (P, E, A) + ((W,) if sv is not None else ()) + (S,)
+        out_shape = ((P, E, A) + ((W,) if sv is not None else ())
+                     + ((D,) if det_grid else ()) + (S,))
         reshape = lambda x: x.reshape(out_shape + x.shape[1:])
         traces = (None if traces is None
                   else jax.tree_util.tree_map(reshape, traces))
@@ -1075,7 +1091,11 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
     grids share one compiled engine per scan-length bucket — the
     schedule arrays are traced. `detector=` runs the change-point
     detector in every run (design model = each profile);
-    `SweepResult.detections` then carries per-run alarm counts.
+    `SweepResult.detections` then carries per-run alarm counts. A
+    SEQUENCE of DetectorConfigs sweeps the detector hyperparameters
+    (threshold, min_gap, drift, ...) as their own grid axis — a D axis
+    between [workloads] and seeds, vmapped like the RLS-config axis —
+    for threshold/ROC tuning in one compiled call.
 
     Execution layer (`repro.core.executor`): with every keyword at its
     default the grid runs ONE-SHOT on the legacy nested-vmap engine —

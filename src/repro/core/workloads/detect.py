@@ -42,6 +42,7 @@ from repro.core.plant import PlantProfile
 # Canonical packing order of the traced detector parameters.
 DET_PARAM_FIELDS = ("kl_ref", "tau_ref", "noise_ref", "drift",
                     "threshold", "min_gap", "level_eta", "level_slack")
+DET_PARAM_DIM = len(DET_PARAM_FIELDS)
 # state slots: model replay, residual level, the two PH statistics, the
 # refractory countdown and two counters
 DET_PRED_L, DET_LEVEL, DET_M_POS, DET_M_NEG, DET_COOLDOWN, \

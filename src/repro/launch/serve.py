@@ -13,6 +13,7 @@ CPU quickstart:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -21,7 +22,9 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.configs.base import PowerControlConfig, ShapeConfig
-from repro.core.nrm import NRM
+from repro.core.nrm import NRM, SimulatedPowerActuator
+from repro.core.plane import ControlPlane
+from repro.core.plant import PROFILES
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import init_params
@@ -37,6 +40,11 @@ def main(argv=None) -> dict:
     p.add_argument("--prompt-len", type=int, default=64)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--power", action="store_true")
+    p.add_argument("--plane", action="store_true",
+                   help="route --power through the multi-tenant "
+                        "ControlPlane (as its single tenant) instead of "
+                        "the in-process NRM — the service-mesh wiring, "
+                        "same control law")
     p.add_argument("--epsilon", type=float, default=0.15)
     p.add_argument("--plant", default="v5e-chip")
     p.add_argument("--seed", type=int, default=0)
@@ -90,7 +98,8 @@ def main(argv=None) -> dict:
             "blocks": cache["blocks"], "pos": cache["pos"]})
 
     nrm = None
-    if args.power:
+    plane = actuator = None
+    if args.power and not args.plane:
         nrm = NRM(PowerControlConfig(epsilon=args.epsilon,
                                      plant_profile=args.plant,
                                      sampling_period=0.05))
@@ -130,6 +139,36 @@ def main(argv=None) -> dict:
                 nrm.actuator.advance(sim_time - last_ctrl)
                 nrm.control_step(now=sim_time)
                 last_ctrl = sim_time
+        elif args.power:
+            # --plane: the decode loop is tenant 0 of a ControlPlane —
+            # the exact wiring a multi-model serving host would use,
+            # sharing the NRM's control law through plane_step
+            if i == 0:  # compile step: skip, see train.py
+                continue
+            if i == 1:
+                base = PROFILES[args.plant]
+                frac_max = base.progress_max / base.K_L
+                profile = dataclasses.replace(
+                    base, K_L=(float(args.batch) / dt_real)
+                    / max(frac_max, 1e-9))  # = NRM.calibrate
+                actuator = SimulatedPowerActuator(profile)
+                plane = ControlPlane(profile=profile,
+                                     epsilon=args.epsilon, dt=0.05)
+                plane.add_tenant("serve")
+                last_ctrl = 0.0
+            frac = float(profile.static_progress(
+                actuator._pcap)) / profile.progress_max
+            dt_eff = dt_real / max(frac, 1e-3)
+            sim_time += dt_eff
+            energy += float(profile.power_of_pcap(
+                actuator._pcap)) * dt_eff
+            plane.ingest(["serve"], [sim_time], [float(args.batch)])
+            if sim_time - last_ctrl >= plane.dt:
+                actuator.advance(sim_time - last_ctrl)
+                dec = plane.tick(now=sim_time)
+                actuator.set_pcap(
+                    float(dec["applied"][plane.slot("serve")]))
+                last_ctrl = sim_time
         else:
             sim_time += dt_real
 
@@ -140,7 +179,9 @@ def main(argv=None) -> dict:
         "sim_time_s": round(sim_time, 3),
         "tok_per_s_sim": round(toks / max(sim_time, 1e-9), 2),
         "energy_j": round(energy, 1),
-        "final_pcap": round(nrm.actuator._pcap, 1) if nrm else None,
+        "final_pcap": (round(nrm.actuator._pcap, 1) if nrm
+                       else round(actuator._pcap, 1) if actuator
+                       else None),
     }
     if not args.quiet:
         print(result)

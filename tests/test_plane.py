@@ -1,0 +1,415 @@
+"""Control plane (repro.core.plane): the single control-law code path.
+
+Pins the tentpole refactor's contract from four sides: (1) the NRM's
+control_step is BIT-FOR-BIT the pre-refactor stateful loop (transcribed
+here as oracles), (2) a 1-tenant ControlPlane tracks an NRM, (3) the
+heterogeneous lax.switch tick equals per-branch planes row by row, and
+(4) whole-plane snapshots kill/resume across processes losslessly.
+"""
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PowerControlConfig
+from repro.core import policies as pol
+from repro.core.adaptive import RLSAdapter, RLSConfig
+from repro.core.controller import PIController, PIGains
+from repro.core.nrm import NRM
+from repro.core.plane import ControlPlane, _bucket, plane_step
+from repro.core.plant import PROFILES
+from repro.core.policies import DutyCyclePolicy, OfflineRLPolicy, PIPolicy
+from repro.core.signals import HeartbeatAggregator
+from repro.core.workloads.detect import (DetectorConfig, detect_init,
+                                         detect_step, detector_values)
+
+
+def _beats(rng, rate, t, dt):
+    n = int(rng.poisson(rate * dt))
+    return [t - dt + (j + 0.5) * dt / max(n, 1) for j in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# 1. NRM.control_step == the pre-refactor stateful loop, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_control_step_matches_pre_refactor_pi_loop():
+    """Default-PI control_step now routes through plane_step; the
+    decision sequence must equal the old `controller.step` loop exactly
+    (same Python-float arithmetic, no f32 re-rounding)."""
+    cfg = PowerControlConfig(epsilon=0.12, plant_profile="gros")
+    nrm = NRM(cfg)
+    ctrl = PIController(PIGains.from_model(nrm.profile, 0.12))
+    hb = HeartbeatAggregator()
+    rng = np.random.default_rng(0)
+    dt, t = cfg.sampling_period, 0.0
+    for k in range(100):
+        t += dt
+        for bt in _beats(rng, 3.0 + 2.0 * (k % 7), t, dt):
+            nrm.heartbeat(t=bt)
+            hb.beat(bt)
+        rec = nrm.control_step(dt=dt)
+        p = hb.progress(t)  # consumes the window: call once per period
+        pcap_ref = ctrl.step(p, dt)
+        assert rec.pcap == pcap_ref, f"period {k}"
+        assert rec.progress == p
+
+
+@pytest.mark.parametrize("policy", [
+    DutyCyclePolicy(), PIPolicy(adaptive=RLSConfig()),
+    OfflineRLPolicy(weights=(0.3,) * pol.N_FEATURES)],
+    ids=["dutycycle", "pi_rls", "offline_rl"])
+def test_control_step_matches_pre_refactor_policy_loop(policy):
+    """policy= + detector= control_step vs a transcription of the old
+    body (detect -> on_change -> PolicyObs -> policy_step), bit for bit,
+    across a phase change that fires the live detector."""
+    det_cfg = DetectorConfig(threshold=6.0, min_gap=5)
+    nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros"),
+              policy=policy, detector=det_cfg)
+    prof, gains = nrm.profile, nrm.gains
+    vals = pol.policy_values(policy, prof, gains)
+    state = pol.policy_init(policy, vals, gains)
+    det_vals = detector_values(det_cfg, prof)
+    det_state = detect_init(det_vals, gains, float(prof.pcap_max))
+    hb = HeartbeatAggregator()
+    pcap_applied = float(prof.pcap_max)
+    rng = np.random.default_rng(1)
+    dt, t, fired = 1.0, 0.0, False
+    for k in range(80):
+        t += dt
+        rate = 40.0 if k < 40 else 8.0  # mid-run phase change
+        for bt in _beats(rng, rate, t, dt):
+            nrm.heartbeat(t=bt)
+            hb.beat(bt)
+        rec = nrm.control_step(dt=dt)
+        # --- transcribed pre-refactor control_step body ---
+        progress = hb.progress(t)
+        det_state, det = detect_step(det_vals, det_state,
+                                     jnp.float32(progress),
+                                     gains.linearize(pcap_applied),
+                                     jnp.float32(dt))
+        detected = bool(det)
+        st = state
+        if detected:
+            st = pol.branch_on_change(policy)(vals, st)
+        power = float(prof.power_of_pcap(pcap_applied))
+        obs = pol.PolicyObs(progress=jnp.float32(progress),
+                            power=jnp.float32(power), dt=jnp.float32(dt),
+                            gains=gains,
+                            phase_change=jnp.float32(detected))
+        state, pcap = pol.policy_step(policy, vals, st, obs)
+        pcap = float(pcap)
+        # --------------------------------------------------
+        assert rec.pcap == pcap, f"period {k}"
+        assert rec.phase_change == detected
+        fired = fired or detected
+        pcap_applied = float(np.clip(pcap, prof.pcap_min, prof.pcap_max))
+    assert fired, "detector never alarmed; the phase change is too mild"
+
+
+def test_control_step_adaptive_tracks_numpy_adapter_oracle():
+    """The default adaptive path moved from the float64 numpy RLSAdapter
+    mirror onto the packed f32 pi_rls branch; trajectories must agree to
+    estimator precision (not bit-for-bit: the old mirror was f64)."""
+    nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros",
+                                 adaptive=True))
+    adapter = RLSAdapter(nrm.gains, nrm.profile)
+    ctrl = PIController(PIGains.from_model(nrm.profile, 0.1))
+    hb = HeartbeatAggregator()
+    rng = np.random.default_rng(2)
+    dt, t = 1.0, 0.0
+    mine, ref = [], []
+    for k in range(60):
+        t += dt
+        for bt in _beats(rng, 30.0, t, dt):
+            nrm.heartbeat(t=bt)
+            hb.beat(bt)
+        rec = nrm.control_step(dt=dt)
+        progress = hb.progress(t)
+        ctrl.gains = adapter.update(ctrl.gains, progress,
+                                    float(ctrl.state.prev_pcap_l), dt)
+        ref.append(ctrl.step(progress, dt))
+        mine.append(rec.pcap)
+    mine, ref = np.asarray(mine), np.asarray(ref)
+    assert float(np.mean(np.abs(mine - ref)) / np.mean(np.abs(ref))) < 0.02
+    # scheduled gains reach the observable controller state
+    assert nrm.controller.gains.k_p == pytest.approx(
+        float(nrm._rls_state.k_p))
+
+
+# ---------------------------------------------------------------------------
+# 2. ControlPlane vs NRM / vs itself
+# ---------------------------------------------------------------------------
+
+def test_plane_single_tenant_tracks_nrm():
+    """One tenant's plane decisions track the NRM runtime loop (f32 row
+    packing vs the NRM's Python-float gains: equal to float32 noise)."""
+    plane = ControlPlane(profile="gros", epsilon=0.1, dt=1.0)
+    plane.add_tenant("node0")
+    nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros"))
+    rng = np.random.default_rng(3)
+    t = 0.0
+    for k in range(50):
+        t += 1.0
+        bts = _beats(rng, 3.0 + (k % 5), t, 1.0)
+        if bts:
+            plane.ingest(["node0"] * len(bts), bts)
+            for bt in bts:
+                nrm.heartbeat(t=bt)
+        dec = plane.tick()
+        rec = nrm.control_step(dt=1.0)
+        s = plane.slot("node0")
+        assert dec["progress"][s] == pytest.approx(rec.progress, abs=1e-5)
+        assert dec["applied"][s] == pytest.approx(
+            float(np.clip(rec.pcap, nrm.profile.pcap_min,
+                          nrm.profile.pcap_max)), rel=1e-3)
+
+
+def test_plane_many_pi_tenants_track_independent_nrms():
+    """N tenants with different epsilons == N independent NRMs (the
+    batched tick is N feedback loops, not one averaged one)."""
+    plane = ControlPlane(profile="gros", dt=1.0)
+    epss = [0.05, 0.1, 0.2]
+    nrms = []
+    for i, eps in enumerate(epss):
+        plane.add_tenant(f"n{i}", epsilon=eps)
+        nrms.append(NRM(PowerControlConfig(epsilon=eps,
+                                           plant_profile="gros")))
+    rng = np.random.default_rng(4)
+    t = 0.0
+    for k in range(40):
+        t += 1.0
+        ids, times = [], []
+        for i, nrm in enumerate(nrms):
+            bts = _beats(rng, 10.0 + 5.0 * i, t, 1.0)
+            ids += [f"n{i}"] * len(bts)
+            times += bts
+            for bt in bts:
+                nrm.heartbeat(t=bt)
+        if ids:
+            plane.ingest(ids, times)
+        dec = plane.tick()
+        for i, nrm in enumerate(nrms):
+            rec = nrm.control_step(dt=1.0)
+            s = plane.slot(f"n{i}")
+            assert dec["applied"][s] == pytest.approx(
+                float(np.clip(rec.pcap, nrm.profile.pcap_min,
+                              nrm.profile.pcap_max)), rel=1e-3), \
+                f"tenant {i} period {k}"
+
+
+def test_heterogeneous_plane_matches_single_branch_planes():
+    """Mixed policy kinds dispatch through one lax.switch graph; each
+    row must compute exactly what a single-branch plane computes."""
+    mk = dict(profile="gros", dt=1.0, detector=DetectorConfig())
+    mixed = ControlPlane(**mk)
+    policies = {"a": None, "b": DutyCyclePolicy(),
+                "c": PIPolicy(adaptive=RLSConfig()),
+                "d": OfflineRLPolicy(weights=(0.2,) * pol.N_FEATURES)}
+    solos = {}
+    for tid, p in policies.items():
+        mixed.add_tenant(tid, policy=p)
+        solos[tid] = ControlPlane(**mk)
+        solos[tid].add_tenant(tid, policy=p)
+    rng = np.random.default_rng(5)
+    t = 0.0
+    for k in range(30):
+        t += 1.0
+        for i, tid in enumerate(policies):
+            rate = 25.0 + 10.0 * i if k < 15 else 6.0  # phase change
+            bts = _beats(rng, rate, t, 1.0)
+            if bts:
+                mixed.ingest([tid] * len(bts), bts)
+                solos[tid].ingest([tid] * len(bts), bts)
+        dec = mixed.tick()
+        for tid in policies:
+            solo = solos[tid].tick()
+            np.testing.assert_allclose(
+                dec["applied"][mixed.slot(tid)],
+                solo["applied"][solos[tid].slot(tid)],
+                rtol=1e-6, atol=1e-4, err_msg=f"{tid} period {k}")
+
+
+def test_add_remove_leaves_survivor_state_untouched():
+    plane = ControlPlane(profile="gros", dt=1.0)
+    for i in range(3):
+        plane.add_tenant(f"n{i}")
+    rng = np.random.default_rng(6)
+    t = 0.0
+    for k in range(5):
+        t += 1.0
+        for i in range(3):
+            bts = _beats(rng, 20.0, t, 1.0)
+            plane.ingest([f"n{i}"] * len(bts), bts)
+        plane.tick()
+    s0, s2 = plane.slot("n0"), plane.slot("n2")
+    keep = (plane._pstate[[s0, s2]].copy(),
+            plane._pcap[[s0, s2]].copy(),
+            plane.store.counts()[[s0, s2]].copy())
+    victim = plane.slot("n1")
+    plane.remove_tenant("n1")
+    new_id = plane.add_tenant("n3", policy=DutyCyclePolicy())
+    assert plane.slot("n3") == victim  # slot recycled
+    np.testing.assert_array_equal(plane._pstate[[s0, s2]], keep[0])
+    np.testing.assert_array_equal(plane._pcap[[s0, s2]], keep[1])
+    np.testing.assert_array_equal(plane.store.counts()[[s0, s2]], keep[2])
+    assert plane.n_tenants == 3 and new_id == "n3"
+    with pytest.raises(KeyError):
+        plane.slot("n1")
+    with pytest.raises(ValueError, match="already registered"):
+        plane.add_tenant("n0")
+
+
+def test_capacity_grows_in_buckets_preserving_state():
+    assert _bucket(1) == 16 and _bucket(17) == 32 and _bucket(100) == 128
+    plane = ControlPlane(profile="gros", dt=1.0, capacity=16)
+    plane.add_tenant("n0")
+    plane.ingest(["n0"] * 3, [0.2, 0.5, 0.8])
+    plane.tick()
+    row = plane._pstate[plane.slot("n0")].copy()
+    plane.add_tenants(40)
+    assert plane.capacity == 64
+    assert plane.n_tenants == 41
+    np.testing.assert_array_equal(plane._pstate[plane.slot("n0")], row)
+    plane.tick()  # still ticks at the new capacity
+
+
+def test_chunked_tick_streams_and_matches_unchunked():
+    a = ControlPlane(profile="gros", dt=1.0)
+    b = ControlPlane(profile="gros", dt=1.0)
+    ids = [f"n{i}" for i in range(20)]
+    for p in (a, b):
+        for tid in ids:
+            p.add_tenant(tid)
+    rng = np.random.default_rng(7)
+    t, seen = 0.0, []
+    for k in range(3):
+        t += 1.0
+        batch_ids, times = [], []
+        for i, tid in enumerate(ids):
+            bts = _beats(rng, 5.0 + i, t, 1.0)
+            batch_ids += [tid] * len(bts)
+            times += bts
+        a.ingest(batch_ids, times)
+        b.ingest(batch_ids, times)
+        seen.clear()
+        da = a.tick(chunk_size=8,
+                    consume=lambda lo, hi, out: seen.append((lo, hi)))
+        db = b.tick()
+        assert seen[0][0] == 0 and seen[-1][1] == a.capacity
+        for k_ in ("pcap", "applied", "phase_change", "progress"):
+            np.testing.assert_array_equal(da[k_], db[k_], err_msg=k_)
+
+
+# ---------------------------------------------------------------------------
+# 3. snapshots: round-trip, tamper rejection, cross-process kill/resume
+# ---------------------------------------------------------------------------
+
+def _demo_plane():
+    plane = ControlPlane(profile="gros", dt=1.0,
+                         detector=DetectorConfig(threshold=8.0))
+    plane.add_tenant("pi0")
+    plane.add_tenant("dc0", policy=DutyCyclePolicy())
+    plane.add_tenant("rls0", policy=PIPolicy(adaptive=RLSConfig()))
+    return plane
+
+
+def _drive(plane, n_ticks, k0):
+    """Deterministic beats (function of tick index and slot only, no
+    RNG) so two processes replay identical streams; returns the applied
+    rows of the live slots, stacked over ticks."""
+    out = []
+    for k in range(k0, k0 + n_ticks):
+        t = plane._t + 1.0
+        ids, times = [], []
+        for tid in ("pi0", "dc0", "rls0"):
+            nb = 2 + (plane.slot(tid) + k) % 3
+            ids += [tid] * nb
+            times += [t - 1.0 + (j + 0.5) / nb for j in range(nb)]
+        plane.ingest(ids, times)
+        dec = plane.tick()
+        out.append([dec["applied"][plane.slot(tid)]
+                    for tid in ("pi0", "dc0", "rls0")])
+    return np.asarray(out)
+
+
+def test_snapshot_roundtrip_and_tamper_rejection():
+    plane = _demo_plane()
+    _drive(plane, 4, 0)
+    snap = pickle.loads(pickle.dumps(plane.snapshot()))
+    twin = ControlPlane.restore(snap)
+    np.testing.assert_array_equal(_drive(plane, 4, 4), _drive(twin, 4, 4))
+    bad = pickle.loads(pickle.dumps(plane.snapshot()))
+    bad.pstate[0, 0] += 1.0
+    with pytest.raises(ValueError, match="fingerprint"):
+        ControlPlane.restore(bad)
+
+
+def test_snapshot_kill_resume_across_processes(tmp_path):
+    """The paper's NRM survives restarts via checkpointed state; the
+    plane must too — restore in a FRESH process and continue the exact
+    decision sequence of the uninterrupted plane."""
+    plane = _demo_plane()
+    _drive(plane, 4, 0)
+    snap_path = tmp_path / "plane.pkl"
+    with open(snap_path, "wb") as f:
+        pickle.dump(plane.snapshot(), f)
+    expect = _drive(plane, 4, 4)   # uninterrupted continuation
+    script = textwrap.dedent("""
+        import pickle, sys
+        import numpy as np
+        from repro.core.plane import ControlPlane
+
+        with open(sys.argv[1], "rb") as f:
+            plane = ControlPlane.restore(pickle.load(f))
+        out = []
+        for k in range(4, 8):
+            t = plane._t + 1.0
+            ids, times = [], []
+            for tid in ("pi0", "dc0", "rls0"):
+                nb = 2 + (plane.slot(tid) + k) % 3
+                ids += [tid] * nb
+                times += [t - 1.0 + (j + 0.5) / nb for j in range(nb)]
+            plane.ingest(ids, times)
+            dec = plane.tick()
+            out.append([dec["applied"][plane.slot(tid)]
+                        for tid in ("pi0", "dc0", "rls0")])
+        np.save(sys.argv[2], np.asarray(out))
+    """)
+    out_path = tmp_path / "resumed.npy"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath("src")
+    subprocess.run([sys.executable, "-c", script, str(snap_path),
+                    str(out_path)], check=True, env=env, timeout=240)
+    np.testing.assert_array_equal(np.load(out_path), expect)
+
+
+# ---------------------------------------------------------------------------
+# 4. plane_step as a primitive
+# ---------------------------------------------------------------------------
+
+def test_plane_step_detector_mask_freezes_state():
+    """det_on=0 must suppress the alarm AND freeze the detector state
+    (a masked tenant re-enabling later starts where it left off, not
+    from a half-accumulated statistic)."""
+    prof = PROFILES["gros"]
+    gains = PIGains.from_model(prof, 0.1)
+    det_cfg = DetectorConfig(threshold=0.5, min_gap=0, drift=0.0)
+    dv = detector_values(det_cfg, prof)
+    ds0 = detect_init(dv, gains)
+    vals = pol.policy_values(PIPolicy(), prof, gains)
+    st = pol.policy_init(PIPolicy(), vals, gains)
+    args = (gains, "pi", vals, st, float(prof.pcap_max),
+            jnp.float32(0.0), jnp.float32(100.0), jnp.float32(1.0))
+    _, ds_on, _, ch_on = plane_step(*args, det_vals=dv, det_state=ds0,
+                                    det_on=jnp.float32(1.0))
+    _, ds_off, _, ch_off = plane_step(*args, det_vals=dv, det_state=ds0,
+                                      det_on=jnp.float32(0.0))
+    assert float(ch_off) == 0.0
+    np.testing.assert_array_equal(np.asarray(ds_off), np.asarray(ds0))
+    assert not np.array_equal(np.asarray(ds_on), np.asarray(ds0))

@@ -427,15 +427,17 @@ def test_nrm_adaptive_checkpoint_round_trips_estimator_state():
     other.load_state_dict(d)
     np.testing.assert_allclose(np.asarray(other._rls_state.theta),
                                np.asarray(nrm._rls_state.theta))
-    assert other._adaptive.kl_hat == pytest.approx(
+    assert float(other._rls_state.kl_hat) == pytest.approx(
         float(nrm._rls_state.kl_hat))
+    assert other.controller.gains.k_p == pytest.approx(
+        float(nrm._rls_state.k_p))
     # loading a pre-estimator checkpoint resets instead of keeping stale
     fresh_ckpt = NRM(PowerControlConfig(
         epsilon=0.1, plant_profile="gros", adaptive=True)).state_dict()
     assert "rls_state" not in fresh_ckpt
     other.load_state_dict(fresh_ckpt)
     assert other._rls_state is None
-    assert other._adaptive._prev is None
+    assert other.controller.gains.k_p == pytest.approx(other.gains.k_p)
     # a non-adaptive NRM rejects a checkpoint carrying estimator state
     with pytest.raises(ValueError, match="adaptive"):
         NRM(PowerControlConfig(epsilon=0.1,
@@ -475,7 +477,7 @@ def test_nrm_accepts_adaptive_pi_policy():
               policy=PIPolicy(adaptive=RLSConfig()))
     tr = nrm.run_simulated(total_work=300.0, seed=2)
     assert {"kl_hat", "tau_hat"} <= set(tr)
-    assert nrm._policy_state is not None and nrm._adaptive is None
+    assert nrm._policy_state is not None and nrm._rls_cfg is None
     tr2 = nrm.run_simulated(total_work=600.0, seed=3)
     assert float(tr2["work"][0]) > 300.0          # resumed, not restarted
     # estimator continued from the packed state, not re-initialized: a

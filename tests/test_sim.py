@@ -149,12 +149,14 @@ def test_nrm_adaptive_runs_on_engine_and_threads_rls_state():
     assert {"kl_hat", "tau_hat", "k_p", "k_i"} <= set(tr)
     assert nrm._rls_state is not None
     kl1 = float(nrm._rls_state.kl_hat)
-    # numpy adapter mirrors the engine (runtime control_step continuity)
-    assert nrm._adaptive.kl_hat == pytest.approx(kl1)
+    # the scheduled gains reach the stateful controller (runtime
+    # control_step continuity)
+    assert nrm.controller.gains.k_p == pytest.approx(
+        float(nrm._rls_state.k_p))
     tr2 = nrm.run_simulated(total_work=800.0, seed=3)
     assert float(tr2["work"][0]) > 400.0  # resumed, not restarted
     # estimator continued (history survives across the call boundary)
-    assert nrm._adaptive._prev is not None
+    assert bool(nrm._rls_state.has_prev)
 
 
 def test_adaptive_resume_without_rls_state_starts_estimator():
@@ -185,6 +187,34 @@ def test_adaptive_sweep_grid_axis_and_squeeze():
                  max_time=600.0, adaptive=RLSConfig(),
                  collect_traces=False)
     assert res1.exec_time.shape == (2, 2)
+
+
+def test_detector_sweep_grid_axis():
+    """A SEQUENCE of DetectorConfigs sweeps the detector
+    hyperparameters as their own vmapped axis (between [workloads] and
+    seeds), exactly equal per-slice to single-config sweeps."""
+    from repro.core.workloads.detect import DetectorConfig
+    cfgs = [DetectorConfig(threshold=0.5, min_gap=5),
+            DetectorConfig(threshold=1e6)]
+    kw = dict(total_work=400.0, max_time=600.0, collect_traces=False)
+    res = sweep("gros", [0.1, 0.2], range(2), detector=cfgs, **kw)
+    assert res.exec_time.shape == (2, 2, 2)       # (E, D, S)
+    det = np.asarray(res.detections)
+    assert det.shape == (2, 2, 2)
+    assert det[:, 0].sum() > 0      # hair-trigger threshold fires
+    assert (det[:, 1] == 0).all()   # unreachable threshold never does
+    for d, cfg in enumerate(cfgs):  # D slice == that config alone
+        one = sweep("gros", [0.1, 0.2], range(2), detector=cfg, **kw)
+        np.testing.assert_array_equal(np.asarray(one.exec_time),
+                                      np.asarray(res.exec_time)[:, d])
+        np.testing.assert_array_equal(np.asarray(one.detections),
+                                      det[:, d])
+    # the chunked executor path flattens/reassembles the D axis exactly
+    ch = sweep("gros", [0.1, 0.2], range(2), detector=cfgs,
+               chunk_size=3, **kw)
+    np.testing.assert_array_equal(np.asarray(ch.exec_time),
+                                  np.asarray(res.exec_time))
+    np.testing.assert_array_equal(np.asarray(ch.detections), det)
 
 
 def test_summary_mode_matches_trace_reductions():

@@ -83,7 +83,8 @@ def test_train_power_smoke_with_checkpoint_resume():
         assert sidecars, "no checkpoint written before the kill"
         extra = json.loads(sidecars[-1].read_text())["extra"]
         nrm_state = extra["nrm"]
-        assert {"prev_error", "prev_pcap_l", "t"} <= set(nrm_state)
+        assert {"prev_error", "prev_pcap_l", "t",
+                "heartbeats"} <= set(nrm_state)
         # restoring into a fresh NRM reproduces the controller state
         nrm = NRM(PowerControlConfig(epsilon=0.1,
                                      plant_profile="v5e-chip"))
@@ -91,6 +92,11 @@ def test_train_power_smoke_with_checkpoint_resume():
         assert float(nrm.controller.state.prev_error) == pytest.approx(
             nrm_state["prev_error"])
         assert nrm._t == pytest.approx(nrm_state["t"])
+        # the heartbeat ring buffer round-trips too (regression: it was
+        # dropped, so the first post-restore period saw zero progress
+        # and commanded a cold-start transient)
+        assert nrm.hb.state_dict() == nrm_state["heartbeats"]
+        assert len(nrm.hb) == len(nrm_state["heartbeats"]["t"])
         # resume to completion (a fresh process, as a real restart is):
         # power control stays in the loop and training finishes
         proc = _train(common + ["--steps", "14", "--resume", "--kill-at",
