@@ -28,8 +28,9 @@ def main() -> None:
 
     from benchmarks import (beyond_adaptive, fig3_system_analysis,
                             fig4_static, fig5_dynamics, fig6_control,
-                            fig7_pareto, fig8_phases, plane_load,
-                            policy_faceoff, roofline, telemetry)
+                            fig7_pareto, fig8_phases, fig9_chaos,
+                            plane_load, policy_faceoff, roofline,
+                            telemetry)
     modules = {
         "fig3": fig3_system_analysis,
         "fig4": fig4_static,
@@ -41,10 +42,14 @@ def main() -> None:
         "faceoff": policy_faceoff,
         "roofline": roofline,
         "plane": plane_load,
+        "chaos": fig9_chaos,
         # last: times the flagship engine workloads and writes the
         # machine-readable BENCH_sim.json perf record at the repo root
         "telemetry": telemetry,
     }
+    # heavyweight fixed-horizon grids that only run when asked for by
+    # name (CI runs them as their own step before the quick pass)
+    opt_in = {"chaos"}
     if args.only and args.only not in modules:
         p.error(f"--only {args.only!r}: unknown module; choose from "
                 f"{sorted(modules)}")
@@ -53,6 +58,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for key, mod in modules.items():
         if args.only and key != args.only:
+            continue
+        if not args.only and key in opt_in:
+            print(f"{key}/skipped,0,opt-in (run with --only {key})")
             continue
         try:
             for name, us, derived in mod.run(quick=not args.full):

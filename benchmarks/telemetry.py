@@ -270,6 +270,30 @@ def _merge_history(history: list, row: dict,
     return out[-cap:]
 
 
+def merge_history_value(key: str, value, quick: bool = True) -> None:
+    """Set ONE extra field on THIS commit's history row (rev+quick
+    deduped via `_merge_history`, creating the row if the telemetry
+    snapshot has not run yet) — how benchmark modules (fig9_chaos's
+    ``chaos_guard_gain``) record a headline scalar in the cross-PR
+    trajectory without owning the whole row."""
+    import datetime
+
+    data = _read_bench()
+    rev = _git_rev()
+    hist = list(data.get("history", []))
+    row = next((dict(h) for h in hist
+                if h.get("rev") == rev and h.get("quick") == quick),
+               None)
+    if row is None:
+        row = {"rev": rev,
+               "date": datetime.datetime.now(datetime.timezone.utc)
+               .strftime("%Y-%m-%dT%H:%M:%SZ"),
+               "quick": quick}
+    row[key] = value
+    data["history"] = _merge_history(hist, row)
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+
+
 def run(quick: bool = True):
     import datetime
 
@@ -285,13 +309,21 @@ def run(quick: bool = True):
     # every timed entry), keyed by commit — this is what accumulates
     # across PRs instead of being clobbered by each snapshot
     rev = _git_rev()
-    data["history"] = _merge_history(
-        list(prev_data.get("history", [])),
-        {"rev": rev,
-         "date": datetime.datetime.now(datetime.timezone.utc)
-         .strftime("%Y-%m-%dT%H:%M:%SZ"),
-         "quick": quick,
-         "warm_s": {k: v["warm_s"] for k, v in fresh.items()}})
+    hist_prev = list(prev_data.get("history", []))
+    row = {"rev": rev,
+           "date": datetime.datetime.now(datetime.timezone.utc)
+           .strftime("%Y-%m-%dT%H:%M:%SZ"),
+           "quick": quick,
+           "warm_s": {k: v["warm_s"] for k, v in fresh.items()}}
+    # keep extra fields other modules set on this commit's row via
+    # merge_history_value (chaos_guard_gain): the snapshot refreshes its
+    # own keys without clobbering theirs
+    prev_row = next((h for h in hist_prev
+                     if h.get("rev") == rev
+                     and h.get("quick") == quick), None)
+    if prev_row is not None:
+        row = {**prev_row, **row}
+    data["history"] = _merge_history(hist_prev, row)
     BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
     # self-verify: the append must be OBSERVABLE in the file we just
     # wrote; a silent skip (unwritable path, serialization surprise)

@@ -43,6 +43,11 @@ class RLSConfig:
     lam: float = 0.995      # forgetting factor
     dwell: int = 5          # min periods between gain re-placements
     kl_clamp: float = 4.0   # K_L_hat within [K_L_ref/c, K_L_ref*c]
+    # divergence guard: cap on trace(P). A spike-corrupted regressor can
+    # inflate the covariance geometrically (1/lam per period) until the
+    # gain computation overflows f32; rescaling P back to this trace
+    # bounds the estimator's worst-case step without touching theta.
+    p_trace_max: float = 1e6
 
 
 # Canonical packing order for traced RLS parameters (mirrors the
@@ -50,14 +55,16 @@ class RLSConfig:
 # K_L (the adapter linearizes against the model the gains were placed on,
 # not the true plant); `tau_obj` is the closed-loop time constant implied
 # by the original design, tau_obj = 1 / (kl_ref * k_i0).
-RLS_FIELDS = ("lam", "dwell", "kl_clamp", "kl_ref", "tau_obj")
+RLS_FIELDS = ("lam", "dwell", "kl_clamp", "kl_ref", "tau_obj",
+              "p_trace_max")
 
 
 def rls_values(cfg: RLSConfig, design: PlantProfile, gains0: PIGains
                ) -> jnp.ndarray:
     tau_obj = 1.0 / (design.K_L * gains0.k_i)
     return jnp.asarray([cfg.lam, float(cfg.dwell), cfg.kl_clamp,
-                        design.K_L, tau_obj], jnp.float32)
+                        design.K_L, tau_obj, cfg.p_trace_max],
+                       jnp.float32)
 
 
 class RLSState(NamedTuple):
@@ -95,7 +102,8 @@ def rls_step(rls_vals, s: RLSState, progress, pcap_l, dt) -> RLSState:
     theta is stored unclipped, theta2 is clipped only for the
     (tau_hat, K_L_hat) conversion, and gains move every `dwell`-th call.
     """
-    lam, dwell, kl_clamp, kl_ref, tau_obj = (rls_vals[i] for i in range(5))
+    lam, dwell, kl_clamp, kl_ref, tau_obj, p_max = (rls_vals[i]
+                                                    for i in range(6))
     y = progress - kl_ref  # progress_L against the design model
     phi = s.prev_phi
     err = y - phi @ s.theta
@@ -103,6 +111,12 @@ def rls_step(rls_vals, s: RLSState, progress, pcap_l, dt) -> RLSState:
     k = (s.P @ phi) / denom
     theta = jnp.where(s.has_prev, s.theta + k * err, s.theta)
     P = jnp.where(s.has_prev, (s.P - jnp.outer(k, phi @ s.P)) / lam, s.P)
+    # covariance trace clamp (divergence guard): a corrupt regressor
+    # stream inflates P geometrically until the gain math overflows f32;
+    # rescaling preserves the covariance's shape while bounding its
+    # magnitude. The untriggered branch returns P itself, bit-for-bit.
+    tr = P[0, 0] + P[1, 1]
+    P = jnp.where(tr > p_max, P * (p_max / tr), P)
 
     th2 = jnp.clip(theta[1], _TH2_LO, _TH2_HI)
     tau_hat = dt * th2 / (1.0 - th2)
@@ -161,6 +175,7 @@ class RLSAdapter:
     lam: float = 0.995          # forgetting factor
     dwell: int = 5              # min periods between gain updates
     kl_clamp: float = 4.0       # K_L_hat within [K_L/c, K_L*c]
+    p_trace_max: float = 1e6    # covariance trace clamp (divergence guard)
 
     def __post_init__(self):
         self.theta = np.array([self.profile.K_L * 0.5, 0.5])
@@ -189,6 +204,9 @@ class RLSAdapter:
             k = (self.P @ phi) / denom
             self.theta = self.theta + k * err
             self.P = (self.P - np.outer(k, phi @ self.P)) / self.lam
+            tr = float(np.trace(self.P))
+            if tr > self.p_trace_max:
+                self.P = self.P * (self.p_trace_max / tr)
         self._prev = (pcap_l, y)
 
         th1, th2 = self.theta

@@ -24,13 +24,14 @@ control survives restarts.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import PowerControlConfig
+from repro.core import faults as flt
 from repro.core.controller import PIController, PIGains, PIState
 from repro.core.plant import PROFILES, PlantProfile, plant_init, plant_step
 from repro.core.signals import HeartbeatAggregator
@@ -82,6 +83,9 @@ class ControlRecord:
     power: float
     setpoint: float
     phase_change: bool = False  # the live detector alarmed this period
+    # guarded-degradation mode this period (faults.GUARD_NORMAL /
+    # GUARD_HOLD / GUARD_FAILSAFE as int); 0 when no guard is armed
+    guard_mode: int = 0
 
 
 class NRM:
@@ -91,7 +95,8 @@ class NRM:
                  actuator: Optional[PowerActuator] = None,
                  profile: Optional[PlantProfile] = None,
                  policy=None,
-                 detector: Optional[DetectorConfig] = None):
+                 detector: Optional[DetectorConfig] = None,
+                 guard: Union[None, bool, flt.GuardConfig] = None):
         self.cfg = pc_cfg
         self.profile = profile or PROFILES[pc_cfg.plant_profile]
         self.actuator = actuator or SimulatedPowerActuator(self.profile)
@@ -112,6 +117,14 @@ class NRM:
         # with its packed state threaded across both paths
         self._detector = detector
         self._det_state = None
+        # guarded degradation (repro.core.faults.GuardConfig): the same
+        # watchdog/sentinel layer plane_step runs in the scan engine,
+        # armed live in control_step and inside run_simulated's scan
+        self._guard = (None if not guard
+                       else (flt.GuardConfig() if guard is True
+                             else guard))
+        self._guard_state = None
+        self._guard_vals = None
         # packed detector/policy parameter vectors are pure functions of
         # (config, profile, gains): cached here, rebuilt on calibrate()
         self._det_vals = None
@@ -164,6 +177,16 @@ class NRM:
                                           self._pcap_applied)
         return self._det_vals, self._det_state
 
+    def _guard_pack(self):
+        """Lazy packed guard (vals, state) — (None, None) unguarded."""
+        if self._guard is None:
+            return None, None
+        if self._guard_vals is None:
+            self._guard_vals = flt.guard_values(self._guard)
+        if self._guard_state is None:
+            self._guard_state = flt.guard_init()
+        return self._guard_vals, self._guard_state
+
     def control_step(self, dt: Optional[float] = None,
                      now: Optional[float] = None) -> ControlRecord:
         """One control period — a 1-tenant wrapper over
@@ -191,6 +214,8 @@ class NRM:
             self._t += dt
         progress = self.hb.progress(self._t)
         det_vals, det_state = self._det_pack()
+        gvals, gstate = self._guard_pack()
+        gmode = 0.0
         if self._policy is not None:
             if self._policy_vals is None:
                 self._policy_vals = pol.policy_values(
@@ -205,11 +230,17 @@ class NRM:
                 # read obs.power get the model's estimate instead
                 power = float(self.profile.power_of_pcap(
                     self._pcap_applied))
-            self._policy_state, det_s, pcap, change = plane.plane_step(
+            out = plane.plane_step(
                 self.gains, self._policy, vals, self._policy_state,
                 self._pcap_applied, jnp.float32(progress),
                 jnp.float32(power), jnp.float32(dt),
-                det_vals=det_vals, det_state=det_state)
+                det_vals=det_vals, det_state=det_state,
+                guard_vals=gvals, guard_state=gstate)
+            if gvals is None:
+                self._policy_state, det_s, pcap, change = out
+            else:
+                (self._policy_state, det_s, pcap, change,
+                 self._guard_state, gmode) = out
             pcap = float(pcap)
         else:
             # PI / adaptive-PI ride the SAME plane step, through the
@@ -232,10 +263,16 @@ class NRM:
                             None if not adaptive
                             else rls_pack(self._rls_state))
             branch = "pi_rls" if adaptive else "pi"
-            state, det_s, pcap, change = plane.plane_step(
+            out = plane.plane_step(
                 self.controller.gains, branch, self._policy_vals, state,
                 self._pcap_applied, progress, None, dt,
-                det_vals=det_vals, det_state=det_state)
+                det_vals=det_vals, det_state=det_state,
+                guard_vals=gvals, guard_state=gstate)
+            if gvals is None:
+                state, det_s, pcap, change = out
+            else:
+                (state, det_s, pcap, change,
+                 self._guard_state, gmode) = out
             self.controller.state = PIState(prev_error=state[0],
                                             prev_pcap_l=state[1])
             if adaptive:
@@ -256,13 +293,16 @@ class NRM:
         rec = ControlRecord(t=self._t, progress=progress, pcap=pcap,
                             power=self.actuator.read_power(),
                             setpoint=float(self.gains.setpoint),
-                            phase_change=detected)
+                            phase_change=detected,
+                            guard_mode=int(float(gmode)))
         self.records.append(rec)
         return rec
 
     # ---- full simulated run (paper evaluation setup) -----------------------
     def run_simulated(self, total_work: float, max_time: float = 3600.0,
-                      seed: int = 0) -> Dict[str, np.ndarray]:
+                      seed: int = 0,
+                      faults: Optional[flt.FaultSchedule] = None
+                      ) -> Dict[str, np.ndarray]:
         """Closed loop against the simulated plant until work completes.
 
         Delegates to the jitted `repro.core.sim` scan engine (one compiled
@@ -303,11 +343,18 @@ class NRM:
                     self.gains.k_p, self.gains.k_i)
         if self._detector is not None:
             kwargs["detector"] = self._detector
+        if self._guard is not None:
+            kwargs["guard"] = self._guard
+        if faults is not None:
+            kwargs["faults"] = faults
         init = sim.resume_init(self.actuator.state,
                                self.controller.state,
                                self.actuator._pcap, rls=rls,
                                policy_state=policy_state,
-                               det_state=self._det_state)
+                               det_state=self._det_state,
+                               guard_state=(self._guard_state
+                                            if self._guard is not None
+                                            else None))
         # derive the engine's key from the actuator RNG (advanced after
         # every run) so a resumed segment at the same seed does not
         # replay the previous segment's noise stream
@@ -328,6 +375,9 @@ class NRM:
         if res.detector_state is not None:
             # detector continues live (control_step) where the scan ended
             self._det_state = jnp.asarray(res.detector_state)
+        if res.guard_state is not None:
+            # guard watchdog continues live where the scan ended
+            self._guard_state = jnp.asarray(res.guard_state)
         self.actuator.state = jax.tree_util.tree_map(
             jnp.asarray, res.plant_state)
         self.actuator._pcap = res.pcap
@@ -366,7 +416,8 @@ class NRM:
             from repro.core.adaptive import RLSAdapter
             c = self._rls_cfg
             adapter = RLSAdapter(self.gains, self.profile, lam=c.lam,
-                                 dwell=c.dwell, kl_clamp=c.kl_clamp)
+                                 dwell=c.dwell, kl_clamp=c.kl_clamp,
+                                 p_trace_max=c.p_trace_max)
         rng = np.random.default_rng(seed)
         dt = self.cfg.sampling_period
         traces = {"t": [], "progress": [], "pcap": [], "power": [],
@@ -414,6 +465,9 @@ class NRM:
         if self._det_state is not None:
             d["det_state"] = np.asarray(self._det_state,
                                         np.float32).tolist()
+        if self._guard_state is not None:
+            d["guard_state"] = np.asarray(self._guard_state,
+                                          np.float32).tolist()
         d["pcap_applied"] = self._pcap_applied
         # the heartbeat ring buffer IS run state: without it, the first
         # post-restore control period sees zero progress and commands a
@@ -445,6 +499,13 @@ class NRM:
                              "configure a DetectorConfig before loading")
         self._det_state = (None if ds is None
                            else jnp.asarray(ds, jnp.float32))
+        gs = d.get("guard_state")
+        if gs is not None and self._guard is None:
+            raise ValueError("checkpoint carries guard state but this "
+                             "NRM has no guard=; configure the same "
+                             "GuardConfig before loading")
+        self._guard_state = (None if gs is None
+                             else jnp.asarray(gs, jnp.float32))
         self._pcap_applied = float(d.get("pcap_applied",
                                          self.profile.pcap_max))
         hb = d.get("heartbeats")

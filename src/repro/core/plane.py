@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor
+from repro.core import faults as flt
 from repro.core import policies as pol
 from repro.core.controller import PIGains, PIState, pi_init
 from repro.core.plant import PROFILES, PlantProfile
@@ -74,7 +75,8 @@ def unpack_gains(vals) -> PIGains:
 
 def plane_step(gains: PIGains, policy, policy_vals, state, pcap_applied,
                progress, power, dt, *, det_vals=None, det_state=None,
-               det_on=None):
+               det_on=None, guard_vals=None, guard_state=None,
+               guard_on=None):
     """One tenant's control period — the single control-law code path.
 
     Detector first (when ``det_vals`` is not None): the residual is
@@ -93,41 +95,140 @@ def plane_step(gains: PIGains, policy, policy_vals, state, pcap_applied,
     STATICALLY (no detector ops in the graph), which keeps
     detector-free engines byte-identical to the pre-detector ones.
 
+    ``guard_vals`` (packed `repro.core.faults.GuardConfig`) arms the
+    guarded-degradation layer around the same core: non-finite/outlier
+    sentinels on progress and power (rejected signals are replaced by
+    the last accepted ones), a stale-signal watchdog (``hold_k``
+    consecutive invalid periods -> hold the applied cap, ``failsafe_k``
+    -> fail safe to pcap_max, which can never violate the performance
+    contract), a policy-state divergence guard (a non-finite post-step
+    state rolls back through the branch's ``on_change`` hook and the
+    cap fails safe), and an estimator reset on recovery from fail-safe.
+    While the watchdog is engaged the policy/detector state is FROZEN —
+    no decisions are taken on stale data. ``guard_on`` masks the guard
+    per tenant inside a vmapped batch (masked rows compute exactly the
+    unguarded arithmetic); ``guard_vals=None`` skips the guard
+    STATICALLY, keeping guard-free graphs byte-identical to pre-guard
+    ones.
+
     Pure and jit/vmap/scan-safe; also runs eagerly with host scalars
     (the NRM path), where it reproduces the stateful runtime loop's
     arithmetic exactly. Returns ``(new_state, new_det_state, pcap,
-    change)`` with ``change`` the 0/1 f32 alarm flag.
+    change)`` with ``change`` the 0/1 f32 alarm flag — plus
+    ``(new_guard_state, guard_mode)`` appended when guarded. When no
+    guard trigger fires, every guarded output is bit-for-bit the
+    unguarded one (each trigger is a ``jnp.where`` whose false branch
+    is the clean value).
     """
-    if det_vals is None:
-        det_s, change = det_state, jnp.float32(0.0)
-        pol_prev = state
+    def core(state_in, progress_in, power_in):
+        if det_vals is None:
+            det_s, change = det_state, jnp.float32(0.0)
+            pol_prev = state_in
+        else:
+            det_s, detected = detect_step(det_vals, det_state,
+                                          jnp.float32(progress_in),
+                                          gains.linearize(pcap_applied),
+                                          jnp.float32(dt))
+            if det_on is not None:
+                detected = detected & (det_on > 0.5)
+                det_s = jnp.where(det_on > 0.5, det_s, det_state)
+            # alarm -> the policy's on_change reaction (RLS covariance
+            # reset + immediate gain re-placement for adaptive PI;
+            # identity for fixed-gain PI)
+            pol_prev = jnp.where(detected,
+                                 pol.branch_on_change(policy)(policy_vals,
+                                                              state_in),
+                                 state_in)
+            change = detected.astype(jnp.float32)
+        obs = pol.PolicyObs(progress=progress_in, power=power_in, dt=dt,
+                            gains=gains, phase_change=change)
+        new_state, pcap = pol.branch_step(policy)(policy_vals, pol_prev,
+                                                  obs)
+        return new_state, det_s, pcap, change
+
+    if guard_vals is None:
+        return core(state, progress, power)
+
+    gv = jnp.asarray(guard_vals)
+    hold_k, failsafe_k, mult, recover = (gv[i] for i in range(4))
+    gs = jnp.asarray(guard_state)
+    g_on = (jnp.asarray(guard_on) > 0.5) if guard_on is not None \
+        else jnp.asarray(True)
+    pg = jnp.float32(progress)
+    # signal sentinels: non-finite, non-positive or wildly out-of-range
+    # progress is NOT a measurement — it is a fault symptom
+    p_ok = (jnp.isfinite(pg) & (pg > 0.0)
+            & (pg <= mult * jnp.maximum(gains.setpoint, 1e-6)))
+    p_ok_eff = p_ok | ~g_on  # masked rows treat every signal as valid
+    last_pg = gs[flt.G_LAST_PROGRESS]
+    pg_eff = jnp.where(p_ok_eff, pg, last_pg)
+    if power is None:
+        pw = pw_ok = None
+        pw_eff = None
     else:
-        det_s, detected = detect_step(det_vals, det_state,
-                                      jnp.float32(progress),
-                                      gains.linearize(pcap_applied),
-                                      jnp.float32(dt))
-        if det_on is not None:
-            detected = detected & (det_on > 0.5)
-            det_s = jnp.where(det_on > 0.5, det_s, det_state)
-        # alarm -> the policy's on_change reaction (RLS covariance reset
-        # + immediate gain re-placement for adaptive PI; identity for
-        # fixed-gain PI)
-        pol_prev = jnp.where(detected,
-                             pol.branch_on_change(policy)(policy_vals,
-                                                          state),
-                             state)
-        change = detected.astype(jnp.float32)
-    obs = pol.PolicyObs(progress=progress, power=power, dt=dt,
-                        gains=gains, phase_change=change)
-    new_state, pcap = pol.branch_step(policy)(policy_vals, pol_prev, obs)
-    return new_state, det_s, pcap, change
+        pw = jnp.float32(power)
+        w_hi = mult * (gains.a * gains.pcap_max + gains.b)
+        pw_ok = jnp.isfinite(pw) & (pw >= 0.0) & (pw <= w_hi)
+        last_pw = gs[flt.G_LAST_POWER]
+        pw_eff = jnp.where(pw_ok | ~g_on, pw,
+                           jnp.where(last_pw > 0.0, last_pw,
+                                     gains.a * pcap_applied + gains.b))
+    # stale-signal watchdog: consecutive invalid progress periods
+    stale = jnp.where(p_ok_eff, 0.0, gs[flt.G_STALE] + 1.0)
+    mode = jnp.where(stale > failsafe_k, flt.GUARD_FAILSAFE,
+                     jnp.where(stale > hold_k, flt.GUARD_HOLD,
+                               flt.GUARD_NORMAL))
+    # recovery edge: the first fresh signal after a fail-safe routes
+    # the state through on_change — estimators re-converge from a reset
+    # covariance, not the one identified on garbage
+    recov = (g_on & (gs[flt.G_MODE] >= flt.GUARD_FAILSAFE) & p_ok
+             & (recover > 0.5))
+    state_in = jnp.where(recov,
+                         pol.branch_on_change(policy)(policy_vals,
+                                                      jnp.asarray(state)),
+                         state)
+    ns, ds, pcap_cmd, change = core(state_in, pg_eff, pw_eff)
+    # divergence guard: a non-finite post-step state rolls back to the
+    # pre-step value via on_change (RLS covariance reset; identity
+    # on_change == plain rollback) and the cap fails safe this period
+    diverged = g_on & ~jnp.all(jnp.isfinite(ns))
+    ns = jnp.where(diverged,
+                   pol.branch_on_change(policy)(policy_vals, state_in),
+                   ns)
+    pcap_cmd = jnp.where(diverged, gains.pcap_max, pcap_cmd)
+    # degradation ladder: hold the applied cap, then fail safe to
+    # pcap_max; an engaged watchdog freezes policy + detector state
+    engaged = mode >= flt.GUARD_HOLD
+    pcap_out = jnp.where(mode >= flt.GUARD_FAILSAFE, gains.pcap_max,
+                         jnp.where(engaged, jnp.float32(pcap_applied),
+                                   pcap_cmd))
+    ns = jnp.where(engaged, state, ns)
+    if det_vals is not None:
+        ds = jnp.where(engaged, det_state, ds)
+    change = jnp.where(engaged, jnp.float32(0.0), change)
+    inval = (~p_ok).astype(jnp.float32)
+    if power is not None:
+        inval = inval + (~pw_ok).astype(jnp.float32)
+    new_gs = jnp.stack([
+        stale, mode,
+        jnp.where(p_ok, pg, last_pg),
+        (gs[flt.G_LAST_POWER] if power is None
+         else jnp.where(pw_ok, pw, gs[flt.G_LAST_POWER])),
+        gs[flt.G_N_INVALID] + inval,
+        gs[flt.G_N_FAILSAFE]
+        + (mode >= flt.GUARD_FAILSAFE).astype(jnp.float32),
+        gs[flt.G_N_RESETS] + (recov | diverged).astype(jnp.float32),
+        gs[flt.G_SPARE]])
+    new_gs = jnp.where(g_on, new_gs, gs)
+    return ns, ds, pcap_out, change, new_gs, mode
 
 
 @functools.lru_cache(maxsize=None)
-def tick_fn(branches: Tuple[str, ...]) -> Callable:
+def tick_fn(branches: Tuple[str, ...], guarded: bool = False) -> Callable:
     """The batched service tick for one branch set: ``fn(rows, dt)``
-    vmapping `plane_step` over tenant rows. Cached per branch tuple so
-    adding tenants of an already-active policy kind never recompiles.
+    vmapping `plane_step` over tenant rows. Cached per (branch tuple,
+    guarded) so adding tenants of an already-active policy kind never
+    recompiles.
 
     ``rows`` is a dict of row-major arrays: ``gains`` (N, GAIN_DIM),
     ``pvals`` (N, POLICY_PARAM_DIM), ``pstate`` (N, POLICY_STATE_DIM),
@@ -137,27 +238,62 @@ def tick_fn(branches: Tuple[str, ...]) -> Callable:
     the NRM's first-period behavior. Output rows: the advanced
     ``pstate``/``det_state`` plus ``pcap`` (raw command), ``applied``
     (clipped to the tenant's actuator range) and ``phase_change``.
+
+    With ``guarded=True`` the rows additionally carry ``guard_vals``
+    (N, GUARD_PARAM_DIM), ``guard_state`` (N, GUARD_STATE_DIM) and
+    ``guard_on`` (N,), and the outputs gain ``guard_state`` /
+    ``guard_mode`` — per-tenant quarantine: a row whose watchdog
+    trips is frozen at its held/fail-safe cap WITHOUT perturbing the
+    other rows' arithmetic (vmap keeps rows independent, and masked
+    rows compute exactly the unguarded graph).
     """
-    def row(gv, pv, ps, dv, ds, det_on, pcap_applied, progress, power,
-            dt):
+    if not guarded:
+        def row(gv, pv, ps, dv, ds, det_on, pcap_applied, progress,
+                power, dt):
+            gains = unpack_gains(gv)
+            power = jnp.where(jnp.isfinite(power), power,
+                              gains.a * pcap_applied + gains.b)
+            ps2, ds2, pcap, change = plane_step(
+                gains, branches, pv, ps, pcap_applied, progress, power,
+                dt, det_vals=dv, det_state=ds, det_on=det_on)
+            applied = jnp.clip(pcap, gains.pcap_min, gains.pcap_max)
+            return {"pstate": ps2, "det_state": ds2, "pcap": pcap,
+                    "applied": applied, "phase_change": change}
+
+        vrow = jax.vmap(row, in_axes=(0,) * 9 + (None,))
+
+        def fn(rows: Dict[str, jnp.ndarray], dt):
+            return vrow(rows["gains"], rows["pvals"], rows["pstate"],
+                        rows["det_vals"], rows["det_state"],
+                        rows["det_on"], rows["pcap"], rows["progress"],
+                        rows["power"], dt)
+
+        return fn
+
+    def grow(gv, pv, ps, dv, ds, det_on, gvv, gst, g_on, pcap_applied,
+             progress, power, dt):
         gains = unpack_gains(gv)
         power = jnp.where(jnp.isfinite(power), power,
                           gains.a * pcap_applied + gains.b)
-        ps2, ds2, pcap, change = plane_step(
+        ps2, ds2, pcap, change, gs2, mode = plane_step(
             gains, branches, pv, ps, pcap_applied, progress, power, dt,
-            det_vals=dv, det_state=ds, det_on=det_on)
+            det_vals=dv, det_state=ds, det_on=det_on, guard_vals=gvv,
+            guard_state=gst, guard_on=g_on)
         applied = jnp.clip(pcap, gains.pcap_min, gains.pcap_max)
         return {"pstate": ps2, "det_state": ds2, "pcap": pcap,
-                "applied": applied, "phase_change": change}
+                "applied": applied, "phase_change": change,
+                "guard_state": gs2, "guard_mode": mode}
 
-    vrow = jax.vmap(row, in_axes=(0,) * 9 + (None,))
+    vgrow = jax.vmap(grow, in_axes=(0,) * 12 + (None,))
 
-    def fn(rows: Dict[str, jnp.ndarray], dt):
-        return vrow(rows["gains"], rows["pvals"], rows["pstate"],
-                    rows["det_vals"], rows["det_state"], rows["det_on"],
-                    rows["pcap"], rows["progress"], rows["power"], dt)
+    def gfn(rows: Dict[str, jnp.ndarray], dt):
+        return vgrow(rows["gains"], rows["pvals"], rows["pstate"],
+                     rows["det_vals"], rows["det_state"], rows["det_on"],
+                     rows["guard_vals"], rows["guard_state"],
+                     rows["guard_on"], rows["pcap"], rows["progress"],
+                     rows["power"], dt)
 
-    return fn
+    return gfn
 
 
 def _bucket(n: int, lo: int = 16) -> int:
@@ -194,15 +330,35 @@ class PlaneSnapshot:
     alive: np.ndarray
     store_state: dict
     max_beats: int
+    guard_vals: Optional[np.ndarray] = None
+    guard_state: Optional[np.ndarray] = None
+    guard_on: Optional[np.ndarray] = None
     fingerprint: str = ""
 
     def digest(self) -> str:
-        return executor.digest(
-            {"gains": self.gains, "pvals": self.pvals,
+        d = {"gains": self.gains, "pvals": self.pvals,
              "pstate": self.pstate, "det_vals": self.det_vals,
              "det_state": self.det_state, "det_on": self.det_on,
-             "pcap": self.pcap, "alive": self.alive},
-            (self.t, self.dt, ",".join(self.branches)))
+             "pcap": self.pcap, "alive": self.alive}
+        if self.guard_vals is not None:
+            d.update(guard_vals=self.guard_vals,
+                     guard_state=self.guard_state,
+                     guard_on=self.guard_on)
+        return executor.digest(d, (self.t, self.dt,
+                                   ",".join(self.branches)))
+
+    def validate_finite(self) -> None:
+        """Reject NaN/inf-poisoned packed rows: the fingerprint only
+        proves the snapshot was not modified AFTER it was taken — a
+        plane that snapshotted already-diverged state hashes
+        consistently, so restore re-checks the payload itself."""
+        for name in ("gains", "pvals", "pstate", "det_vals",
+                     "det_state", "pcap", "guard_vals", "guard_state"):
+            arr = getattr(self, name)
+            if arr is not None and not np.isfinite(arr).all():
+                raise ValueError(
+                    f"snapshot field {name!r} carries non-finite "
+                    "values; refusing to restore a NaN-poisoned plane")
 
 
 class ControlPlane:
@@ -222,12 +378,14 @@ class ControlPlane:
     def __init__(self, profile: Union[str, PlantProfile] = "gros",
                  epsilon: float = 0.1, dt: float = 1.0,
                  detector: Optional[DetectorConfig] = None,
+                 guard: Optional[flt.GuardConfig] = None,
                  capacity: int = 16, max_beats: int = 64):
         self.profile = (PROFILES[profile] if isinstance(profile, str)
                         else profile)
         self.epsilon = float(epsilon)
         self.dt = float(dt)
         self.detector = detector          # default for new tenants
+        self.guard = guard                # default guard for new tenants
         self._t = 0.0
         self._branches: Tuple[str, ...] = ("pi",)
         self._slots: Dict[Any, int] = {}
@@ -245,6 +403,9 @@ class ControlPlane:
         self._dvals = np.zeros((cap, DET_PARAM_DIM), np.float32)
         self._dstate = np.zeros((cap, DET_STATE_DIM), np.float32)
         self._det_on = np.zeros(cap, np.float32)
+        self._gvals = np.zeros((cap, flt.GUARD_PARAM_DIM), np.float32)
+        self._gstate = np.zeros((cap, flt.GUARD_STATE_DIM), np.float32)
+        self._guard_on = np.zeros(cap, np.float32)
         self._pcap = np.zeros(cap, np.float32)
         self._alive = np.zeros(cap, bool)
         # dead rows still flow through the vmapped tick: give them the
@@ -255,6 +416,7 @@ class ControlPlane:
         self._gains[:] = g
         self._dvals[:] = np.asarray(detector_values(
             self.detector or DetectorConfig(), self.profile))
+        self._gvals[:] = np.asarray(flt.guard_values(self.guard))
         self._pcap[:] = self.profile.pcap_max
         self._free = [i for i in range(cap) if not self._alive[i]]
 
@@ -270,11 +432,13 @@ class ControlPlane:
         old_cap = self.capacity
         cap = _bucket(max(need, old_cap * 2))
         old = (self._gains, self._pvals, self._pstate, self._dvals,
-               self._dstate, self._det_on, self._pcap, self._alive)
+               self._dstate, self._det_on, self._gvals, self._gstate,
+               self._guard_on, self._pcap, self._alive)
         old_free = [i for i in self._free]
         self._alloc(cap)
         for dst, src in zip((self._gains, self._pvals, self._pstate,
                              self._dvals, self._dstate, self._det_on,
+                             self._gvals, self._gstate, self._guard_on,
                              self._pcap, self._alive), old):
             dst[:old_cap] = src
         self._free = old_free + list(range(old_cap, cap))
@@ -285,6 +449,7 @@ class ControlPlane:
         new_store._n[:old_cap] = self.store._n
         new_store._anchor[:old_cap] = self.store._anchor
         new_store._last_emit[:old_cap] = self.store._last_emit
+        new_store._drops[:old_cap] = self.store._drops
         self.store = new_store
 
     # ---- tenant lifecycle -------------------------------------------------
@@ -298,24 +463,28 @@ class ControlPlane:
     def add_tenant(self, tenant_id: Any = None, *, policy=None,
                    profile: Union[None, str, PlantProfile] = None,
                    epsilon: Optional[float] = None,
-                   detector: Union[None, bool, DetectorConfig] = None
+                   detector: Union[None, bool, DetectorConfig] = None,
+                   guard: Union[None, bool, flt.GuardConfig] = None
                    ) -> Any:
         """Register one tenant; returns its id (the slot index when no
         ``tenant_id`` is given). ``policy=None`` runs the paper's Eq. 4
         PI; any `repro.core.policies` Policy instance dispatches its
         branch. ``detector`` overrides the plane default: True/a
         DetectorConfig enables change-point detection for this tenant,
-        False disables it."""
+        False disables it. ``guard`` likewise arms the
+        guarded-degradation layer (True/a `faults.GuardConfig`) or
+        disarms it (False) for this tenant."""
         return self.add_tenants(1, ids=None if tenant_id is None
                                 else [tenant_id], policy=policy,
                                 profile=profile, epsilon=epsilon,
-                                detector=detector)[0]
+                                detector=detector, guard=guard)[0]
 
     def add_tenants(self, n: int, *, ids: Optional[List[Any]] = None,
                     policy=None,
                     profile: Union[None, str, PlantProfile] = None,
                     epsilon: Optional[float] = None,
-                    detector: Union[None, bool, DetectorConfig] = None
+                    detector: Union[None, bool, DetectorConfig] = None,
+                    guard: Union[None, bool, flt.GuardConfig] = None
                     ) -> List[Any]:
         """Batch-register ``n`` homogeneous tenants in one row write
         (the 100k-tenant path: one gains/init computation broadcast to
@@ -341,6 +510,10 @@ class ControlPlane:
                                            prof), np.float32)
         dstate = np.asarray(detect_init(jnp.asarray(dvals), gains),
                             np.float32)
+        guard_cfg = (self.guard if guard is None
+                     else None if guard is False
+                     else flt.GuardConfig() if guard is True
+                     else guard)
         gvec = np.asarray(gains_values(gains), np.float32)
         if len(self._free) < n:
             self._grow(self.capacity - len(self._free) + n)
@@ -357,6 +530,10 @@ class ControlPlane:
         self._dvals[slots] = dvals
         self._dstate[slots] = dstate
         self._det_on[slots] = 0.0 if det_cfg is None else 1.0
+        self._gvals[slots] = np.asarray(flt.guard_values(guard_cfg),
+                                        np.float32)
+        self._gstate[slots] = np.asarray(flt.guard_init(), np.float32)
+        self._guard_on[slots] = 0.0 if guard_cfg is None else 1.0
         self._pcap[slots] = prof.pcap_max
         self._alive[slots] = True
         for s in slots:
@@ -369,6 +546,8 @@ class ControlPlane:
         s = self._slots.pop(tenant_id)
         self._alive[s] = False
         self._det_on[s] = 0.0
+        self._guard_on[s] = 0.0
+        self._gstate[s] = 0.0
         self.store.clear_row(s)
         # recycle-first: the freed row is the next one handed out, so
         # short-lived tenants churn a few warm rows instead of walking
@@ -428,20 +607,29 @@ class ControlPlane:
                 "pstate": self._pstate, "det_vals": self._dvals,
                 "det_state": self._dstate, "det_on": self._det_on,
                 "pcap": self._pcap, "progress": progress, "power": pw}
-        fn = tick_fn(self._branches)
+        # the guard rides the tick only when some live tenant armed it:
+        # a guard-free plane keeps running the pre-guard compiled graph
+        guarded = bool(self._guard_on.any())
+        if guarded:
+            rows.update(guard_vals=self._gvals, guard_state=self._gstate,
+                        guard_on=self._guard_on)
+        fn = tick_fn(self._branches, guarded)
         decisions = {"pcap": np.empty(cap, np.float32),
                      "applied": np.empty(cap, np.float32),
                      "phase_change": np.empty(cap, np.float32)}
+        if guarded:
+            decisions["guard_mode"] = np.empty(cap, np.float32)
 
         def _merge(lo, hi, out):
             self._pstate[lo:hi] = out["pstate"]
             self._dstate[lo:hi] = out["det_state"]
             self._pcap[lo:hi] = out["applied"]
+            if guarded:
+                self._gstate[lo:hi] = out["guard_state"]
             for k in decisions:
                 decisions[k][lo:hi] = out[k]
             if consume is not None:
-                consume(lo, hi, {k: out[k] for k in
-                                 ("pcap", "applied", "phase_change")})
+                consume(lo, hi, {k: out[k] for k in decisions})
 
         executor.run_grid(fn, rows, (jnp.float32(dt),), cap,
                           chunk_size=chunk_size, devices=devices,
@@ -449,6 +637,14 @@ class ControlPlane:
         decisions["progress"] = progress
         self.last = decisions
         return decisions
+
+    def quarantined(self) -> List[Any]:
+        """Tenant ids currently held in fail-safe by their guard (the
+        plane's quarantine list): their rows are frozen at pcap_max
+        until fresh telemetry arrives, healthy tenants unaffected."""
+        mask = (self._gstate[:, flt.G_MODE] >= flt.GUARD_FAILSAFE) \
+            & (self._guard_on > 0.5) & self._alive
+        return [tid for tid, s in self._slots.items() if mask[s]]
 
     # ---- persistence ------------------------------------------------------
     def snapshot(self) -> PlaneSnapshot:
@@ -463,7 +659,10 @@ class ControlPlane:
             det_state=self._dstate.copy(), det_on=self._det_on.copy(),
             pcap=self._pcap.copy(), alive=self._alive.copy(),
             store_state=self.store.state_dict(),
-            max_beats=self.store.max_beats)
+            max_beats=self.store.max_beats,
+            guard_vals=self._gvals.copy(),
+            guard_state=self._gstate.copy(),
+            guard_on=self._guard_on.copy())
         snap.fingerprint = snap.digest()
         return snap
 
@@ -477,6 +676,9 @@ class ControlPlane:
         if snap.fingerprint and snap.digest() != snap.fingerprint:
             raise ValueError("snapshot fingerprint mismatch: the packed "
                              "state rows were modified or corrupted")
+        # NaN-poisoning is orthogonal to tampering: a diverged plane
+        # fingerprints consistently, so the payload is checked too
+        snap.validate_finite()
         plane = cls(profile=profile, epsilon=epsilon, dt=snap.dt,
                     capacity=snap.capacity, max_beats=snap.max_beats)
         plane._t = snap.t
@@ -489,6 +691,10 @@ class ControlPlane:
         plane._dvals[:] = snap.det_vals
         plane._dstate[:] = snap.det_state
         plane._det_on[:] = snap.det_on
+        if snap.guard_vals is not None:
+            plane._gvals[:] = snap.guard_vals
+            plane._gstate[:] = snap.guard_state
+            plane._guard_on[:] = snap.guard_on
         plane._pcap[:] = snap.pcap
         plane._alive[:] = snap.alive
         plane.store.load_state_dict(snap.store_state)

@@ -6,8 +6,8 @@ Two branches share the PI slots of the packed state vector:
 * ``pi``      — fixed gains. State: [prev_error, prev_pcap_l, 0...].
 * ``pi_rls``  — RLS gain scheduling (§5.2 extension). State: PI slots +
   the 14-slot packed `RLSState` (see `repro.core.adaptive.rls_pack`).
-  Param slots [1:6] carry `rls_values` (lam, dwell, kl_clamp, kl_ref,
-  tau_obj).
+  Param slots [1:7] carry `rls_values` (lam, dwell, kl_clamp, kl_ref,
+  tau_obj, p_trace_max).
 
 The step functions call the SAME `pi_step` / `rls_step` primitives in the
 SAME order as the pre-policy engine did, so PI-via-policy reproduces the
@@ -63,7 +63,7 @@ def _pi_rls_step(vals, state, obs):
     # period's aggregated progress, then the PI runs on the (possibly
     # re-placed) gains
     rls = rls_unpack(state[_RLS_LO:_RLS_HI])
-    rls = rls_step(vals[1:6], rls, obs.progress, state[1], obs.dt)
+    rls = rls_step(vals[1:7], rls, obs.progress, state[1], obs.dt)
     g = obs.gains.with_gains(rls.k_p, rls.k_i)
     pi2, pcap = pi_step(g, PIState(prev_error=state[0],
                                    prev_pcap_l=state[1]),
@@ -72,7 +72,7 @@ def _pi_rls_step(vals, state, obs):
 
 
 def _pi_rls_init(vals, gains):
-    rls = rls_init(vals[1:6], gains.k_p, gains.k_i)
+    rls = rls_init(vals[1:7], gains.k_p, gains.k_i)
     return pi_pack(pi_init(gains), rls_pack(rls))
 
 
@@ -92,7 +92,7 @@ def _pi_rls_on_change(vals, state):
     rls = rls_unpack(state[_RLS_LO:_RLS_HI])
     rls = rls._replace(P=jnp.eye(2, dtype=jnp.float32) * 1e2,
                        has_prev=jnp.array(False),
-                       since_update=vals[2])  # vals[1:6][1] = dwell
+                       since_update=vals[2])  # vals[1:7][1] = dwell
     return state.at[_RLS_LO:_RLS_HI].set(rls_pack(rls))
 
 
@@ -120,4 +120,4 @@ class PIPolicy(Policy):
         if self.adaptive is None:
             return pack_values()
         rv = rls_values(self.adaptive, self.design or profile, gains)
-        return pack_values(*[rv[i] for i in range(5)])
+        return pack_values(*[rv[i] for i in range(6)])

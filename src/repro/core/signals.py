@@ -48,6 +48,7 @@ class TenantHeartbeatStore:
         self._n = np.zeros(int(n_tenants), np.int64)
         self._anchor = np.full(int(n_tenants), np.nan)     # nan = none
         self._last_emit = np.full(int(n_tenants), np.nan)  # nan = none
+        self._drops = np.zeros(int(n_tenants), np.int64)   # rejected beats
 
     @property
     def n_tenants(self) -> int:
@@ -61,11 +62,18 @@ class TenantHeartbeatStore:
         """Buffered (un-emitted) beats per tenant."""
         return self._n.copy()
 
+    def drops(self) -> np.ndarray:
+        """Per-tenant count of beats rejected at ingest (non-finite
+        time/work or negative work — corrupt telemetry that would
+        otherwise poison the Eq. 1 median or the rate's numerator)."""
+        return self._drops.copy()
+
     def clear_row(self, i: int) -> None:
         """Reset one tenant's buffer/anchor/emit clock (tenant churn)."""
         self._n[i] = 0
         self._anchor[i] = np.nan
         self._last_emit[i] = np.nan
+        self._drops[i] = 0
 
     def ingest(self, tenant_ids, times, works=None) -> None:
         """Append a batch of beats, any tenant mix, one vectorized copy.
@@ -89,6 +97,16 @@ class TenantHeartbeatStore:
         N, B = self._t.shape
         if len(ids) and (ids.min() < 0 or ids.max() >= N):
             raise IndexError("tenant id out of range")
+        # ingest-time sanitization: a NaN/inf time would corrupt the
+        # ring's ordering invariant, a non-finite or negative work would
+        # poison the rate numerator; both are dropped here (counted per
+        # tenant) so one sick workload can't contaminate the window
+        bad = ~np.isfinite(t) | ~np.isfinite(w) | (w < 0)
+        if bad.any():
+            np.add.at(self._drops, ids[bad], 1)
+            ids, t, w = ids[~bad], t[~bad], w[~bad]
+            if not len(t):
+                return
         order = np.argsort(ids, kind="stable")  # group, keep beat order
         ids, t, w = ids[order], t[order], w[order]
         # late beats: their window is already emitted. They are dropped,
@@ -204,6 +222,7 @@ class TenantHeartbeatStore:
                        for a in self._anchor],
             "last_emit": [None if np.isnan(e) else float(e)
                           for e in self._last_emit],
+            "drops": self._drops.tolist(),
         }
 
     def load_state_dict(self, state: dict) -> None:
@@ -224,6 +243,8 @@ class TenantHeartbeatStore:
                            for a in state["anchor"]]
         self._last_emit[:] = [np.nan if e is None else e
                               for e in state["last_emit"]]
+        # older snapshots predate the drop counter
+        self._drops[:] = state.get("drops", [0] * self.n_tenants)
 
 
 _ZERO_ID = np.zeros(1, np.int64)
@@ -247,6 +268,12 @@ class HeartbeatAggregator:
 
     def __len__(self) -> int:
         return int(self._store._n[0])
+
+    @property
+    def drops(self) -> int:
+        """Beats rejected at ingest (non-finite time/work, negative
+        work)."""
+        return int(self._store._drops[0])
 
     @property
     def _anchor(self) -> Optional[float]:
@@ -285,13 +312,14 @@ class HeartbeatAggregator:
         s = self._store.state_dict()
         return {"max_beats": s["max_beats"], "t": s["t"][0],
                 "w": s["w"][0], "anchor": s["anchor"][0],
-                "last_emit": s["last_emit"][0]}
+                "last_emit": s["last_emit"][0], "drops": s["drops"][0]}
 
     def load_state_dict(self, state: dict) -> None:
         self._store.load_state_dict({
             "max_beats": state["max_beats"], "t": [state["t"]],
             "w": [state["w"]], "anchor": [state["anchor"]],
-            "last_emit": [state["last_emit"]]})
+            "last_emit": [state["last_emit"]],
+            "drops": [state.get("drops", 0)]})
 
 
 def progress_from_times(beat_times: jnp.ndarray) -> jnp.ndarray:

@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as flt
 from repro.core import plane
 from repro.core import policies as pol
 from repro.core.adaptive import (RLSConfig, RLSState, rls_init, rls_pack,
@@ -212,6 +213,13 @@ class _Carry(NamedTuple):
     # no detector runs — None has no pytree leaves, so detector-free
     # carries keep the exact pre-detector structure (and compiled graph)
     det: Optional[jnp.ndarray] = None
+    # packed fault-injection state (faults.FAULT_STATE_DIM,) when a
+    # FaultSchedule runs, else None; same None-has-no-leaves contract,
+    # so fault-free carries keep the exact pre-faults structure
+    fstate: Optional[jnp.ndarray] = None
+    # packed guard state (faults.GUARD_STATE_DIM,) when the guarded
+    # degradation layer runs, else None
+    guard: Optional[jnp.ndarray] = None
 
 
 # state-vector slots of the PI branches; repro.core.policies.pi owns the
@@ -221,7 +229,8 @@ _PI_RLS_LO, _PI_RLS_HI = PI_RLS_LO, PI_RLS_HI
 
 def _default_init(profile: PlantProfile, gains: PIGains,
                   policy=("pi",), policy_vals=None, schedule=None,
-                  det_vals=None, typed_pi: bool = False) -> _Carry:
+                  det_vals=None, typed_pi: bool = False,
+                  faults=None, guard=None) -> _Carry:
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     # a scheduled run starts in its phase-0 plant (the base profile only
@@ -240,12 +249,16 @@ def _default_init(profile: PlantProfile, gains: PIGains,
                   done=jnp.array(False),
                   summ=_summary_init(),
                   det=(None if det_vals is None
-                       else detect_init(det_vals, gains)))
+                       else detect_init(det_vals, gains)),
+                  fstate=(None if faults is None
+                          else flt.fault_state_init(profile)),
+                  guard=(None if guard is None else flt.guard_init()))
 
 
 def resume_init(plant: PlantState, pi: PIState, pcap,
                 rls: Optional[RLSState] = None,
-                policy_state=None, det_state=None, t0=0.0) -> _Carry:
+                policy_state=None, det_state=None, t0=0.0,
+                fault_state=None, guard_state=None) -> _Carry:
     """Carry that resumes a run from existing plant/controller (and
     optionally RLS estimator) state — the NRM delegation path; the
     heartbeat window and the per-run summaries start fresh. Pass
@@ -275,13 +288,18 @@ def resume_init(plant: PlantState, pi: PIState, pcap,
                   done=jnp.array(False),
                   summ=_summary_init(),
                   det=(None if det_state is None
-                       else jnp.asarray(det_state, jnp.float32)))
+                       else jnp.asarray(det_state, jnp.float32)),
+                  fstate=(None if fault_state is None
+                          else jnp.asarray(fault_state, jnp.float32)),
+                  guard=(None if guard_state is None
+                         else jnp.asarray(guard_state, jnp.float32)))
 
 
 def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                 total_work, max_time, dt, key, *, policy=("pi",),
                 policy_vals=None, cap_limit=None, summary_from=0.0,
-                schedule=None, detector=None, typed_pi: bool = False):
+                schedule=None, detector=None, typed_pi: bool = False,
+                faults=None, guard=None):
     """One fused control period: plant (Eq. 3) -> heartbeat median
     (Eq. 1) -> power-policy command (Eq. 4 PI by default), with
     early-exit-by-mask freezing and online summary reduction.
@@ -315,11 +333,27 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     movement every period. Same float ops in the same order, so
     trajectories are bit-for-bit those of the packed path (tested).
 
+    ``faults`` (traced `repro.core.faults.FaultValues`, or None) scripts
+    telemetry/actuator failures: heartbeat dropout/staleness, meter
+    freeze/bias/spike, stuck/quantized/delayed caps and tenant crashes.
+    Sensor channels corrupt only what the controller OBSERVES (the
+    plant's work/energy integrals stay truthful; the summary accumulates
+    true power, the trace records the observed reading); the fault RNG
+    folds off the period key, so a ``faults=None`` run keeps the exact
+    pre-faults graph and bitstream. ``guard`` (traced
+    `faults.guard_values`, or None) arms the guarded-degradation layer
+    inside `plane_step` — stale-signal watchdog, sentinels, divergence
+    rollback; every trigger is `where(trigger, ..., clean)`, so an
+    untriggered guarded step matches the unguarded one bit-for-bit.
+
     Returns (new_carry, out) where out holds this period's trace row.
     """
     if typed_pi and tuple(pol.as_branches(policy)) != ("pi",):
         raise ValueError("typed_pi is the single-branch ('pi',) fast "
                          f"path; got branches {pol.as_branches(policy)}")
+    if typed_pi and (faults is not None or guard is not None):
+        raise ValueError("typed_pi is the guard-free fixed-gain PI fast "
+                         "path; faults=/guard= need the packed engine")
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     if schedule is None:
@@ -328,16 +362,72 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
         vals, phase_idx = active_profile(schedule, c.t)
         plant_prof = _unpack_profile(vals)
     kplant, khb = jax.random.split(key)
-    plant_s, meas = plant_step(plant_prof, c.plant, c.pcap, dt, kplant)
+    if faults is not None:
+        # the fault stream folds off the PERIOD key, so kplant/khb — and
+        # with them every clean trajectory — stay untouched
+        kfault = jax.random.fold_in(key, 7)
+        af = flt.fault_channels(faults, c.t)
+        applied = flt.apply_actuator(af, c.fstate, c.pcap,
+                                     plant_prof.pcap_min)
+    else:
+        applied = c.pcap
+    plant_s, meas = plant_step(plant_prof, c.plant, applied, dt, kplant)
     t = c.t + dt
+    if faults is not None:
+        crash = af.crash > 0
+        idle = plant_prof.power_of_pcap(plant_prof.pcap_min)
+        # a crashed tenant does no work and burns idle power; progress_l
+        # pins to -K_L (true progress 0) so the restart comes up cold
+        plant_s = PlantState(
+            progress_l=jnp.where(crash, -plant_prof.K_L,
+                                 plant_s.progress_l),
+            dropped=plant_s.dropped,
+            energy=jnp.where(crash, c.plant.energy + idle * dt,
+                             plant_s.energy),
+            work=jnp.where(crash, c.plant.work, plant_s.work))
+        true_power = jnp.where(crash, idle, meas["power"])
     # synthesize heartbeats at the measured rate (Eq. 1 input)
     n = jax.random.poisson(khb, jnp.maximum(meas["progress"], 0.0) * dt)
+    if faults is not None:
+        # dropout thins the window deterministically (floor of the kept
+        # fraction); a crashed tenant emits no beats at all
+        nf = jnp.floor(n.astype(jnp.float32)
+                       * (1.0 - jnp.clip(af.hb_drop, 0.0, 1.0)))
+        n = jnp.where(af.hb_drop > 0, nf.astype(n.dtype), n)
+        n = jnp.where(crash, jnp.zeros_like(n), n)
     progress = _window_median(n, c.anchor_gap, c.has_anchor, dt)
     anchor_gap = jnp.where(n > 0,
                            0.5 * dt / jnp.maximum(
                                n.astype(jnp.float32), 1.0),
                            c.anchor_gap + dt)
     has_anchor = c.has_anchor | (n > 0)
+    if faults is not None:
+        # sensor-side corruption: what the CONTROLLER observes (the
+        # plant integrals above stay truthful)
+        prog_obs = jnp.where(af.hb_stale > 0,
+                             c.fstate[flt.F_LAST_PROGRESS], progress)
+        pw = jnp.where(af.meter_freeze > 0,
+                       c.fstate[flt.F_LAST_POWER], true_power)
+        pw = pw + af.meter_bias
+        spike = jax.random.uniform(kfault) < af.meter_spike_p
+        spike_v = jnp.where(af.meter_spike_v != 0.0, af.meter_spike_v,
+                            jnp.float32(jnp.nan))
+        power_obs = jnp.where(spike, spike_v, pw)
+        fstate_n = jnp.stack([
+            prog_obs,
+            jnp.where(af.meter_freeze > 0,
+                      c.fstate[flt.F_LAST_POWER], true_power),
+            jnp.asarray(c.pcap, jnp.float32),
+            jnp.asarray(applied, jnp.float32),
+            af.crash, jnp.float32(0.0)])
+        f_any = ((af.hb_drop > 0) | (af.hb_stale > 0)
+                 | (af.meter_freeze > 0) | (af.meter_bias != 0)
+                 | (af.meter_spike_p > 0) | (af.act_stuck_on > 0)
+                 | (af.act_quant > 0) | (af.act_delay > 0)
+                 | crash).astype(jnp.float32)
+    else:
+        prog_obs, power_obs = progress, meas["power"]
+        fstate_n = c.fstate
 
     if typed_pi:
         # single-branch PI fast path: detector still runs (fixed-gain
@@ -349,16 +439,26 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
                                           gains.linearize(c.pcap), dt)
             change = detected.astype(jnp.float32)
         pol_s, pcap = pi_step(gains, c.pol, progress, dt)
+        guard_s, gmode = c.guard, None
     else:
         # the control plane's single control-law code path: detector
         # residual against the design model's replay of the APPLIED
         # cap, alarm -> the policy's on_change reaction, then the
         # policy step (repro.core.plane owns this section; the NRM
         # runtime and the multi-tenant service tick call the same
-        # function)
-        pol_s, det_s, pcap, change = plane.plane_step(
-            gains, policy, policy_vals, c.pol, c.pcap, progress,
-            meas["power"], dt, det_vals=detector, det_state=c.det)
+        # function). The controller sees the OBSERVED telemetry —
+        # identical to the measured values when faults is None.
+        if guard is None:
+            pol_s, det_s, pcap, change = plane.plane_step(
+                gains, policy, policy_vals, c.pol, c.pcap, prog_obs,
+                power_obs, dt, det_vals=detector, det_state=c.det)
+            guard_s, gmode = c.guard, None
+        else:
+            (pol_s, det_s, pcap, change, guard_s,
+             gmode) = plane.plane_step(
+                gains, policy, policy_vals, c.pol, c.pcap, prog_obs,
+                power_obs, dt, det_vals=detector, det_state=c.det,
+                guard_vals=guard, guard_state=c.guard)
     if cap_limit is not None:
         pcap = jnp.minimum(pcap, cap_limit)
 
@@ -368,12 +468,15 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     plant_s = frz(plant_s, c.plant)
     pol_s = frz(pol_s, c.pol)
     det_s = frz(det_s, c.det)
+    guard_s = frz(guard_s, c.guard)
+    fstate_n = frz(fstate_n, c.fstate)
     pcap = jnp.where(c.done, c.pcap, pcap)
     anchor_gap = jnp.where(c.done, c.anchor_gap, anchor_gap)
     has_anchor = jnp.where(c.done, c.has_anchor, has_anchor)
     t = jnp.where(c.done, c.t, t)
-    progress = jnp.where(c.done, 0.0, progress)
-    power = jnp.where(c.done, 0.0, meas["power"])
+    progress = jnp.where(c.done, 0.0, prog_obs)
+    power = jnp.where(c.done, 0.0,
+                      meas["power"] if faults is None else true_power)
     change = jnp.where(c.done, 0.0, change) if detector is not None \
         else change
 
@@ -396,6 +499,13 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     out = {"t": t, "progress": progress, "pcap": pcap,
            "power": power, "energy": plant_s.energy,
            "work": plant_s.work, "valid": ~c.done}
+    if faults is not None:
+        # the trace keeps the OBSERVED reading (what the controller was
+        # fed); the summary above accumulated the true one
+        out["power"] = jnp.where(c.done, 0.0, power_obs)
+        out["fault_active"] = jnp.where(c.done, 0.0, f_any)
+    if guard is not None:
+        out["guard_mode"] = jnp.where(c.done, 0.0, gmode)
     if schedule is not None:
         out["phase"] = jnp.where(c.done, -1, phase_idx)
     if detector is not None:
@@ -404,29 +514,30 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
         out.update(pol.branch_extras(policy)(pol_s))
     return _Carry(plant_s, pol_s, pcap, anchor_gap, has_anchor, t,
                   c.steps + (~c.done).astype(jnp.int32), done, summ,
-                  det_s), out
+                  det_s, fstate_n, guard_s), out
 
 
 def _scan_core(max_steps: int, collect: bool = True,
                branches=("pi",), typed_pi: bool = False):
     """Pure closed-loop run: (profile_vals, gains_vals, policy_vals,
-    sched, det_vals, init|None, total_work, max_time, dt, summary_from,
-    key) -> (traces|None, final_carry). The policy branch set is static
-    (part of the jit key); its hyperparameters ride in the traced
-    policy_vals. ``sched``/``det_vals`` are None (static plant, no
-    detector — the pre-phases graph, byte-identical) or traced
-    `ScheduleValues` / detector parameter vectors; jit separates the
-    variants by pytree structure. ``typed_pi`` switches the carried
+    sched, det_vals, fvals, gvals, init|None, total_work, max_time, dt,
+    summary_from, key) -> (traces|None, final_carry). The policy branch
+    set is static (part of the jit key); its hyperparameters ride in the
+    traced policy_vals. ``sched``/``det_vals``/``fvals``/``gvals`` are
+    None (static plant, no detector, no faults, no guard — the
+    pre-existing graph, byte-identical) or traced `ScheduleValues` /
+    detector / `FaultValues` / guard parameter vectors; jit separates
+    the variants by pytree structure. ``typed_pi`` switches the carried
     policy state to a typed `PIState` (single-branch ('pi',) fast path;
     an ``init`` carry must then also hold a typed pol)."""
 
     def run(profile_vals, gains_vals, policy_vals, sched, det_vals,
-            init: Optional[_Carry], total_work, max_time, dt,
-            summary_from, key):
+            fvals, gvals, init: Optional[_Carry], total_work, max_time,
+            dt, summary_from, key):
         profile = _unpack_profile(profile_vals)
         gains = _unpack_gains(gains_vals)
         carry0 = (_default_init(profile, gains, branches, policy_vals,
-                                sched, det_vals, typed_pi)
+                                sched, det_vals, typed_pi, fvals, gvals)
                   if init is None else init)
 
         def body(c: _Carry, k):
@@ -435,7 +546,8 @@ def _scan_core(max_steps: int, collect: bool = True,
                                   policy_vals=policy_vals,
                                   summary_from=summary_from,
                                   schedule=sched, detector=det_vals,
-                                  typed_pi=typed_pi)
+                                  typed_pi=typed_pi, faults=fvals,
+                                  guard=gvals)
             return c2, (out if collect else None)
 
         keys = jax.random.split(key, max_steps)
@@ -457,42 +569,51 @@ def _jit_run(max_steps: int, collect: bool = True, branches=("pi",)):
 @functools.lru_cache(maxsize=None)
 def _jit_sweep_cached(max_steps: int, branches, collect: bool,
                       scheduled: bool, detected: bool,
-                      typed_pi: bool = False, det_grid: bool = False):
+                      typed_pi: bool = False, det_grid: bool = False,
+                      fault_grid: bool = False):
     run = _scan_core(max_steps, collect, branches, typed_pi)
-    f = lambda pv, gv, av, sv, dv, tw, mt, dt, sf, key: run(
-        pv, gv, av, sv, dv, None, tw, mt, dt, sf, key)
+    f = lambda pv, gv, av, sv, dv, fv, gvl, tw, mt, dt, sf, key: run(
+        pv, gv, av, sv, dv, fv, gvl, None, tw, mt, dt, sf, key)
     sched_ax = 0 if scheduled else None
     det_ax = 0 if detected else None
-    f = jax.vmap(f, in_axes=(None,) * 9 + (0,))                  # seeds
+    f = jax.vmap(f, in_axes=(None,) * 11 + (0,))                 # seeds
+    if fault_grid:
+        # fault-scenario axis: fv rows are per-FaultSchedule (plant-
+        # independent, so no profile coupling like sched/det)
+        f = jax.vmap(f, in_axes=(None,) * 5 + (0,) + (None,) * 6)
     if det_grid:
         # detector hyperparameter axis (threshold/min_gap/... grids),
         # vmapped like the RLS-config axis: dv rows are per-config
         f = jax.vmap(f, in_axes=(None, None, None, None, 0)
-                     + (None,) * 5)
+                     + (None,) * 7)
     if scheduled:
-        f = jax.vmap(f, in_axes=(None, None, None, 0) + (None,) * 6)
-    f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 7)       # policies
-    f = jax.vmap(f, in_axes=(None, 0, None) + (None,) * 7)       # eps
-    f = jax.vmap(f, in_axes=(0, 0, 0, sched_ax, det_ax)
+        f = jax.vmap(f, in_axes=(None, None, None, 0) + (None,) * 8)
+    f = jax.vmap(f, in_axes=(None, None, 0) + (None,) * 9)       # policies
+    f = jax.vmap(f, in_axes=(None, 0, None) + (None,) * 9)       # eps
+    f = jax.vmap(f, in_axes=(0, 0, 0, sched_ax, det_ax, None, None)
                  + (None,) * 5)                                  # profs
     return jax.jit(f)
 
 
 def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
                scheduled: bool = False, detected: bool = False,
-               typed_pi: bool = False, det_grid: bool = False):
+               typed_pi: bool = False, det_grid: bool = False,
+               fault_grid: bool = False):
     """Vmapped grid engine. Axis nest (outer->inner): profiles, eps,
-    policies, [workloads], [detectors], seeds; the workload/detector
-    axes exist only when ``scheduled`` / ``det_grid`` (so sweeps
-    without them keep their exact pre-existing shapes and executables).
-    Schedule leaves are (P, W, ...) — resolved per profile; detector
-    values are per-profile (P, DET_PARAM_DIM), or (P, D,
-    DET_PARAM_DIM) with a detector-config grid. A plain wrapper over
-    the lru cache so defaulted and explicit calls share one cache
+    policies, [workloads], [detectors], [faults], seeds; the workload/
+    detector/fault axes exist only when ``scheduled`` / ``det_grid`` /
+    ``fault_grid`` (so sweeps without them keep their exact
+    pre-existing shapes and executables). Schedule leaves are
+    (P, W, ...) — resolved per profile; detector values are per-profile
+    (P, DET_PARAM_DIM), or (P, D, DET_PARAM_DIM) with a detector-config
+    grid; fault leaves are (F, MAX_FAULT_ROWS) stacked FaultValues (a
+    SINGLE FaultSchedule rides unstacked with no axis). A plain wrapper
+    over the lru cache so defaulted and explicit calls share one cache
     key."""
     return _jit_sweep_cached(max_steps, tuple(branches), bool(collect),
                              bool(scheduled), bool(detected),
-                             bool(typed_pi), bool(det_grid))
+                             bool(typed_pi), bool(det_grid),
+                             bool(fault_grid))
 
 
 _jit_sweep.cache_info = _jit_sweep_cached.cache_info
@@ -502,20 +623,26 @@ _jit_sweep.cache_info = _jit_sweep_cached.cache_info
 
 @functools.lru_cache(maxsize=None)
 def _flat_core(max_steps: int, branches, collect: bool, scheduled: bool,
-               detected: bool, typed_pi: bool = False):
+               detected: bool, typed_pi: bool = False,
+               guarded: bool = False):
     """Flat-grid engine for the executor: ONE vmap over per-run rows
     (a dict of (N, ...) leaves) instead of the one-shot nest. Every
     run's parameters and key ride in its own row, so ANY slice of the
     flattened grid computes identical per-run results — which is what
-    makes chunked/sharded == one-shot exact."""
+    makes chunked/sharded == one-shot exact. Fault rows (when present)
+    ride the batched dict like sched/det; the guard parameter vector is
+    grid-wide, so it rides the shared argument tail (``guarded``
+    selects the variant)."""
     run = _scan_core(max_steps, collect, branches, typed_pi)
 
-    def flat(batched, total_work, max_time, dt, summary_from):
+    def flat(batched, total_work, max_time, dt, summary_from, *rest):
+        gvl = rest[0] if guarded else None
+
         def one(b):
             return run(b["prof"], b["gains"], b["pvals"],
-                       b.get("sched"), b.get("det"), None,
-                       total_work, max_time, dt, summary_from,
-                       b["key"])
+                       b.get("sched"), b.get("det"), b.get("faults"),
+                       gvl, None, total_work, max_time, dt,
+                       summary_from, b["key"])
 
         return jax.vmap(one)(batched)
 
@@ -664,6 +791,12 @@ class SimResult:
     # final packed change-point detector state (detector= runs); resume
     # via resume_init(det_state=...). n_phase_changes is its alarm count.
     detector_state: Optional[np.ndarray] = None
+    # final packed fault-injection state (faults= runs); resume via
+    # resume_init(fault_state=...)
+    fault_state: Optional[np.ndarray] = None
+    # final packed guard state (guard= runs; faults.G_* slots carry the
+    # watchdog counters); resume via resume_init(guard_state=...)
+    guard_state: Optional[np.ndarray] = None
 
     @property
     def n_phase_changes(self) -> int:
@@ -695,6 +828,10 @@ class SweepResult:
         default_factory=dict)
     # per-run change-point alarm counts (detector= sweeps), else None
     detections: Optional[jnp.ndarray] = None
+    # per-run final guard state (..., GUARD_STATE_DIM) for guard= sweeps
+    # (faults.G_N_FAILSAFE / G_N_INVALID etc. are the fig9 metrics),
+    # else None
+    guard_state: Optional[jnp.ndarray] = None
 
     def masked_mean(self, key: str) -> np.ndarray:
         """Per-run mean of a trace over its live steps. For 'progress'
@@ -725,7 +862,10 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                          collect_traces: bool = True,
                          summary_warmup: int = 0,
                          workload: Optional[PhaseSchedule] = None,
-                         detector: Optional[DetectorConfig] = None
+                         detector: Optional[DetectorConfig] = None,
+                         faults: Optional[flt.FaultSchedule] = None,
+                         guard: Union[None, bool,
+                                      flt.GuardConfig] = None
                          ) -> SimResult:
     """One fully-jitted closed-loop run (drop-in for NRM.run_simulated).
 
@@ -748,7 +888,16 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
     `phase` index key. ``detector=DetectorConfig(...)`` runs the online
     change-point detector on progress-model residuals (traces gain
     `phase_change`; alarms trigger the policy's `on_change` hook — the
-    RLS covariance reset for adaptive PI)."""
+    RLS covariance reset for adaptive PI).
+
+    ``faults=FaultSchedule(...)`` scripts telemetry/actuator failures
+    inside the scan (see `repro.core.faults`; traces gain
+    `fault_active`, and `power` records the controller's corrupted
+    observation while energy/work stay truthful).
+    ``guard=GuardConfig(...)`` (or ``guard=True`` for the defaults)
+    arms the guarded-degradation layer in `plane_step`; traces gain
+    `guard_mode` and the final watchdog counters come back in
+    `SimResult.guard_state`."""
     profile = _resolve(profile)
     if gains is None:
         if epsilon is None:
@@ -783,7 +932,7 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
         if branch == "pi_rls" and not rls_block.any():
             # resume carry predates the estimator: start a fresh one so
             # adaptive= is honoured rather than silently dropped
-            fresh = rls_init(pvals[1:6], gains.k_p, gains.k_i)
+            fresh = rls_init(pvals[1:7], gains.k_p, gains.k_i)
             init = init._replace(pol=jnp.asarray(init.pol)
                                  .at[_PI_RLS_LO:_PI_RLS_HI]
                                  .set(rls_pack(fresh))
@@ -805,12 +954,26 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
         raise ValueError("init carries detector state but detector=None; "
                          "pass the DetectorConfig so its params are "
                          "traced")
+    fv = None if faults is None else faults.resolve()
+    gvl = (None if not guard
+           else flt.guard_values(None if guard is True else guard))
+    if init is not None and fv is not None and init.fstate is None:
+        # resume carry predates the fault script: fresh fault state
+        init = init._replace(fstate=flt.fault_state_init(profile))
+    elif init is not None and fv is None and init.fstate is not None:
+        raise ValueError("init carries fault state but faults=None; "
+                         "pass the FaultSchedule so its rows are traced")
+    if init is not None and gvl is not None and init.guard is None:
+        init = init._replace(guard=flt.guard_init())
+    elif init is not None and gvl is None and init.guard is not None:
+        raise ValueError("init carries guard state but guard=None; "
+                         "pass the GuardConfig so its params are traced")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     if key is None:
         key = jax.random.PRNGKey(seed)
     traces, final = _jit_run(max_steps, collect_traces, (branch,))(
         profile_values(profile), gains_values(gains), pvals, sched, dv,
-        init, jnp.float32(total_work), jnp.float32(max_time),
+        fv, gvl, init, jnp.float32(total_work), jnp.float32(max_time),
         jnp.float32(dt), jnp.float32(summary_warmup), key)
     # device-side trim: ONE scalar (the live-step counter) decides the
     # slice, so only n real steps cross to host — not the padded buffers
@@ -839,7 +1002,11 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                      rls_state=rls_state,
                      policy_state=vec,
                      detector_state=(None if final.det is None
-                                     else np.asarray(final.det)))
+                                     else np.asarray(final.det)),
+                     fault_state=(None if final.fstate is None
+                                  else np.asarray(final.fstate)),
+                     guard_state=(None if final.guard is None
+                                  else np.asarray(final.guard)))
 
 
 def _sweep_impl(profiles: Union[str, PlantProfile,
@@ -860,6 +1027,9 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                                  Sequence[PhaseSchedule]] = None,
                 detector: Union[None, DetectorConfig,
                                 Sequence[DetectorConfig]] = None,
+                faults: Union[None, flt.FaultSchedule,
+                              Sequence[flt.FaultSchedule]] = None,
+                guard: Union[None, bool, flt.GuardConfig] = None,
                 backend: str = "scan",
                 chunk_size: Optional[int] = None,
                 devices=None,
@@ -941,13 +1111,36 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                                    for d in det_cfgs]) for p in profs])
     else:
         dv = jnp.stack([detector_values(detector, p) for p in profs])
+    fault_grid = (faults is not None
+                  and not isinstance(faults, flt.FaultSchedule))
+    if faults is None:
+        fv = None
+    elif fault_grid:
+        fault_scheds = list(faults)
+        if not fault_scheds:
+            raise ValueError("faults= needs at least one FaultSchedule")
+        # fault-scenario axis (F, MAX_FAULT_ROWS): plant-independent
+        # leaves stacked across schedules, the innermost grid axis
+        # before seeds
+        fv = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[f.resolve() for f in fault_scheds])
+    else:
+        fv = faults.resolve()  # single schedule: no axis, like detector
+    gvl = (None if not guard
+           else flt.guard_values(None if guard is True else guard))
     if typed_pi and branches != ("pi",):
         raise ValueError("typed_pi= is the single-branch fixed-gain PI "
                          f"fast path; this grid dispatches {branches}")
+    if typed_pi and (fv is not None or gvl is not None):
+        raise ValueError("typed_pi= is the guard-free fixed-gain PI "
+                         "fast path; faults=/guard= need the packed "
+                         "engine")
     if backend not in ("scan", "pallas", "auto"):
         raise ValueError(f"unknown backend {backend!r}; choose "
                          "'scan', 'pallas' or 'auto'")
-    pallas_ok = branches == ("pi",) and sv is None and dv is None
+    pallas_ok = (branches == ("pi",) and sv is None and dv is None
+                 and fv is None and gvl is None)
     if backend == "auto":
         # capability dispatch: the mega-kernel covers the flagship
         # fixed-gain PI path and pays off where it lowers natively; the
@@ -957,9 +1150,10 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
     elif backend == "pallas" and not pallas_ok:
         raise ValueError(
             "backend='pallas' covers the fixed-gain PI path only "
-            "(static plant, no detector); this grid needs branches="
-            f"{branches}, workloads={sv is not None}, detector="
-            f"{dv is not None} — use backend='scan'")
+            "(static plant, no detector, no faults/guard); this grid "
+            f"needs branches={branches}, workloads={sv is not None}, "
+            f"detector={dv is not None}, faults={fv is not None}, "
+            f"guard={gvl is not None} — use backend='scan'")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     use_exec = (backend != "scan" or chunk_size is not None
                 or devices is not None or consume is not None
@@ -968,8 +1162,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
     if not use_exec:
         traces, final = _jit_sweep(max_steps, branches, collect_traces,
                                    sv is not None, dv is not None,
-                                   typed_pi, det_grid)(
-            pv, gv, av, sv, dv, jnp.float32(total_work),
+                                   typed_pi, det_grid, fault_grid)(
+            pv, gv, av, sv, dv, fv, gvl, jnp.float32(total_work),
             jnp.float32(max_time), jnp.float32(dt),
             jnp.float32(summary_warmup), keys)
     else:
@@ -978,12 +1172,15 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         W = (1 if sv is None
              else jax.tree_util.tree_leaves(sv)[0].shape[1])
         D = dv.shape[1] if det_grid else 1
-        shape6 = (P, E, A, W, D, S)
-        n_runs = int(np.prod(shape6))
+        F = (jax.tree_util.tree_leaves(fv)[0].shape[0] if fault_grid
+             else 1)
+        shape7 = (P, E, A, W, D, F, S)
+        n_runs = int(np.prod(shape7))
         # flatten the grid to per-run rows (grid-nest order, so the
         # merged leading axis reshapes straight back to
-        # (P,E,A,[W],[D],S))
-        ip, ie, ia, iw, idet, is_ = np.indices(shape6).reshape(6, n_runs)
+        # (P,E,A,[W],[D],[F],S))
+        (ip, ie, ia, iw, idet, ifl,
+         is_) = np.indices(shape7).reshape(7, n_runs)
         batched = {"prof": np.asarray(pv)[ip],
                    "gains": np.asarray(gv)[ip, ie],
                    "pvals": np.asarray(av)[ip, ia],
@@ -994,6 +1191,14 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         if dv is not None:
             batched["det"] = (np.asarray(dv)[ip, idet] if det_grid
                               else np.asarray(dv)[ip])
+        if fv is not None:
+            # fault rows always ride the per-run rows here (a single
+            # schedule broadcasts), so chunk slicing stays uniform
+            batched["faults"] = jax.tree_util.tree_map(
+                lambda x: (np.asarray(x)[ifl] if fault_grid
+                           else np.broadcast_to(
+                               np.asarray(x),
+                               (n_runs,) + np.shape(x)).copy()), fv)
         if backend == "pallas":
             if executor.resolve_devices(devices):
                 logger.warning("backend='pallas' runs single-device; "
@@ -1005,9 +1210,12 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
             wrap = "none"
         else:
             fn = _flat_core(max_steps, branches, collect_traces,
-                            sv is not None, dv is not None, typed_pi)
+                            sv is not None, dv is not None, typed_pi,
+                            gvl is not None)
             shared = (jnp.float32(total_work), jnp.float32(max_time),
                       jnp.float32(dt), jnp.float32(summary_warmup))
+            if gvl is not None:
+                shared = shared + (gvl,)
             wrap = "jit"
         merged, exec_state = executor.run_grid(
             fn, batched, shared, n_runs, chunk_size=chunk_size,
@@ -1019,7 +1227,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         if backend == "pallas":
             final = _carry_from_kernel_final(final)
         out_shape = ((P, E, A) + ((W,) if sv is not None else ())
-                     + ((D,) if det_grid else ()) + (S,))
+                     + ((D,) if det_grid else ())
+                     + ((F,) if fault_grid else ()) + (S,))
         reshape = lambda x: x.reshape(out_shape + x.shape[1:])
         traces = (None if traces is None
                   else jax.tree_util.tree_map(reshape, traces))
@@ -1052,14 +1261,16 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                        n_steps=final.steps,
                        summary=summary,
                        detections=(None if final.det is None
-                                   else final.det[..., DET_N_DETECT])
+                                   else final.det[..., DET_N_DETECT]),
+                       guard_state=final.guard
                        ), exec_state
 
 
 def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
           dt=1.0, tau_obj=10.0, adaptive=None, policies=None,
           collect_traces=True, summary_warmup=0, workloads=None,
-          detector=None, *, backend: str = "scan",
+          detector=None, faults=None, guard=None, *,
+          backend: str = "scan",
           chunk_size: Optional[int] = None, devices=None,
           typed_pi: bool = False, consume=None
           ) -> Optional[SweepResult]:
@@ -1097,6 +1308,19 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
     between [workloads] and seeds, vmapped like the RLS-config axis —
     for threshold/ROC tuning in one compiled call.
 
+    `faults=` scripts telemetry/actuator failures inside every run
+    (`repro.core.faults.FaultSchedule`): a single schedule applies to
+    every run with no new axis; a SEQUENCE sweeps fault scenarios as
+    their own F axis between [detectors] and seeds — degradation curves
+    vs fault severity in one compiled call. `guard=` (GuardConfig, or
+    True for the defaults) arms the guarded-degradation layer in every
+    run's `plane_step`; `SweepResult.guard_state` then carries the
+    per-run watchdog counters (time-in-failsafe, rejected signals,
+    forced resets). `sweep(faults=None, guard=None)` is bit-for-bit the
+    pre-faults engine — the fault RNG folds off a separate key and None
+    arguments carry no pytree leaves, so the compiled graph is the
+    pre-existing one.
+
     Execution layer (`repro.core.executor`): with every keyword at its
     default the grid runs ONE-SHOT on the legacy nested-vmap engine —
     bit-for-bit the pre-executor `sweep`. ``chunk_size=`` cuts the
@@ -1120,7 +1344,7 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
     res, _ = _sweep_impl(profiles, epsilons, seeds, total_work,
                          max_time, dt, tau_obj, adaptive, policies,
                          collect_traces, summary_warmup, workloads,
-                         detector, backend=backend,
+                         detector, faults, guard, backend=backend,
                          chunk_size=chunk_size, devices=devices,
                          typed_pi=typed_pi, consume=consume)
     return res
@@ -1129,7 +1353,8 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
 def sweep_resumable(profiles, epsilons, seeds, total_work,
                     max_time=3600.0, dt=1.0, tau_obj=10.0,
                     adaptive=None, policies=None, collect_traces=True,
-                    summary_warmup=0, workloads=None, detector=None, *,
+                    summary_warmup=0, workloads=None, detector=None,
+                    faults=None, guard=None, *,
                     backend: str = "scan", chunk_size: int,
                     devices=None, typed_pi: bool = False, state=None,
                     stop_after: Optional[int] = None):
@@ -1141,8 +1366,8 @@ def sweep_resumable(profiles, epsilons, seeds, total_work,
     (or process) left off. Same grid semantics as `sweep`."""
     return _sweep_impl(profiles, epsilons, seeds, total_work, max_time,
                        dt, tau_obj, adaptive, policies, collect_traces,
-                       summary_warmup, workloads, detector,
-                       backend=backend, chunk_size=chunk_size,
+                       summary_warmup, workloads, detector, faults,
+                       guard, backend=backend, chunk_size=chunk_size,
                        devices=devices, typed_pi=typed_pi, state=state,
                        stop_after=stop_after)
 

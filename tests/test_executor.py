@@ -209,3 +209,48 @@ def test_chunked_100k_run_summary_grid_bounded_memory():
     e = np.asarray(res.energy).mean(-1)
     t = np.asarray(res.exec_time).mean(-1)
     assert e[-1] < e[0] and t[-1] > t[0]
+
+def test_consume_raise_leaves_state_resumable_bit_identical():
+    """Failure atomicity: a consume= callback that raises mid-grid must
+    leave the ExecState exactly as a clean stop at the same boundary —
+    the failed chunk is NOT marked done (its consume never completed),
+    no partial buffers leak, and resuming with a working consume
+    replays it plus the remainder."""
+    import jax.numpy as jnp
+    fn = lambda b, c: {"y": b["x"] * c}
+    x = np.arange(10, dtype=np.float32)
+    shared = (jnp.float32(2.0),)
+
+    # oracle: a clean stop after the first chunk
+    _, st_clean = executor.run_grid(fn, {"x": x}, shared, 10,
+                                    chunk_size=4, consume=lambda *a: None,
+                                    stop_after=1)
+
+    def bomb(lo, hi, out):
+        if lo >= 4:
+            raise RuntimeError("downstream sink went away")
+
+    st = executor.run_grid(fn, {"x": x}, shared, 10, chunk_size=4,
+                           stop_after=0)[1]
+    with pytest.raises(RuntimeError, match="sink went away"):
+        executor.run_grid(fn, {"x": x}, shared, 10, chunk_size=4,
+                          consume=bomb, state=st)
+
+    # the surviving state is bit-identical to the clean stop
+    assert st.done.tolist() == [True, False, False]
+    assert st.n_runs == st_clean.n_runs
+    assert st.chunk == st_clean.chunk
+    assert st.done.tolist() == st_clean.done.tolist()
+    assert st.buffers is None and st_clean.buffers is None
+    assert st.fingerprint == st_clean.fingerprint
+
+    # resume: only the failed chunk and the tail run, output completes
+    seen = []
+    merged, st2 = executor.run_grid(
+        fn, {"x": x}, shared, 10, chunk_size=4,
+        consume=lambda lo, hi, out: seen.append((lo, hi, out["y"])),
+        state=st)
+    assert merged is None and st2.complete
+    assert [(lo, hi) for lo, hi, _ in seen] == [(4, 8), (8, 10)]
+    np.testing.assert_array_equal(
+        np.concatenate([y for _, _, y in seen]), 2.0 * x[4:])

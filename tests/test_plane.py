@@ -413,3 +413,72 @@ def test_plane_step_detector_mask_freezes_state():
     assert float(ch_off) == 0.0
     np.testing.assert_array_equal(np.asarray(ds_off), np.asarray(ds0))
     assert not np.array_equal(np.asarray(ds_on), np.asarray(ds0))
+
+
+def test_snapshot_nan_poisoned_state_rejected_despite_valid_hash():
+    """The fingerprint only proves post-snapshot integrity; a plane that
+    snapshotted already-diverged (NaN) rows hashes consistently, so
+    restore must reject the payload itself — even when the attacker
+    recomputes the digest over the poisoned rows."""
+    plane = _demo_plane()
+    _drive(plane, 3, 0)
+    snap = pickle.loads(pickle.dumps(plane.snapshot()))
+    snap.pstate[0, 0] = np.nan
+    snap.fingerprint = snap.digest()  # internally consistent again
+    with pytest.raises(ValueError, match="non-finite"):
+        ControlPlane.restore(snap)
+    snap2 = pickle.loads(pickle.dumps(plane.snapshot()))
+    snap2.guard_state[1, 0] = np.inf
+    snap2.fingerprint = snap2.digest()
+    with pytest.raises(ValueError, match="non-finite"):
+        ControlPlane.restore(snap2)
+
+
+def test_guard_quarantine_leaves_other_tenants_bit_identical():
+    """One tenant's telemetry goes dark: its guard must walk the
+    HOLD -> FAILSAFE ladder (and show up in `quarantined()`) while
+    every OTHER tenant's decision stream stays bit-for-bit the
+    all-healthy plane's."""
+    from repro.core import faults as flt
+    mk = dict(profile="gros", dt=1.0,
+              guard=flt.GuardConfig(hold_k=2, failsafe_k=5))
+    healthy = ControlPlane(**mk)
+    chaos = ControlPlane(**mk)
+    ids = ["n0", "sick", "n2"]
+    for p in (healthy, chaos):
+        for tid in ids:
+            p.add_tenant(tid)
+    t = 0.0
+    engaged = False
+    for k in range(14):
+        t += 1.0
+        for p in (healthy, chaos):
+            for tid in ids:
+                if p is chaos and tid == "sick" and k >= 3:
+                    continue  # the sick tenant's beats stop arriving
+                nb = 4 + (k + len(tid)) % 3
+                p.ingest([tid] * nb,
+                         [t - 1.0 + (j + 0.5) / nb for j in range(nb)])
+        dh = healthy.tick()
+        dc = chaos.tick()
+        for tid in ("n0", "n2"):
+            sh, sc = healthy.slot(tid), chaos.slot(tid)
+            for key in ("pcap", "applied", "progress"):
+                np.testing.assert_array_equal(
+                    dh[key][sh], dc[key][sc],
+                    err_msg=f"{tid}/{key} tick {k}")
+        if "guard_mode" in dc:
+            engaged = engaged or \
+                float(dc["guard_mode"][chaos.slot("sick")]) > 0
+    assert engaged, "sick tenant's guard never engaged"
+    assert chaos.quarantined() == ["sick"]
+    assert healthy.quarantined() == []
+    # recovery: beats resume, the quarantine clears
+    t += 1.0
+    chaos.ingest(["sick"] * 4,
+                 [t - 1.0 + (j + 0.5) / 4 for j in range(4)])
+    for tid in ("n0", "n2"):
+        chaos.ingest([tid] * 4,
+                     [t - 1.0 + (j + 0.5) / 4 for j in range(4)])
+    chaos.tick()
+    assert chaos.quarantined() == []

@@ -289,3 +289,53 @@ def test_tenant_store_state_dict_roundtrip():
     other.ingest(more_ids, more_t)
     np.testing.assert_array_equal(store.progress_all(6.5),
                                   other.progress_all(6.5))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rate=st.floats(2.0, 100.0),
+       n_bad=st.integers(1, 30))
+def test_corrupt_beats_dropped_counted_and_progress_unchanged(
+        seed, rate, n_bad):
+    """Ingest sanitization: NaN/inf timestamps and negative/non-finite
+    work interleaved anywhere in a beat train must be rejected (counted
+    in `drops`) without perturbing the progress signal at all — the
+    clean-only aggregator is the oracle. Corrupt beats may land at any
+    position because the filter runs before ordering matters; the VALID
+    beats keep their non-decreasing order (the ingest contract)."""
+    rng = np.random.default_rng(seed)
+    times = synth_heartbeats(rng, rate, duration=4.0, jitter=0.2)
+    works = rng.uniform(0.5, 2.0, len(times))
+
+    corrupt_t, corrupt_w = [], []
+    for k in range(n_bad):
+        kind = k % 4
+        if kind == 0:
+            corrupt_t.append(np.nan)
+            corrupt_w.append(1.0)
+        elif kind == 1:
+            corrupt_t.append(np.inf if k % 8 < 4 else -np.inf)
+            corrupt_w.append(1.0)
+        elif kind == 2:
+            corrupt_t.append(float(rng.uniform(0.0, 4.0)))
+            corrupt_w.append(-1.0)  # negative work
+        else:
+            corrupt_t.append(float(rng.uniform(0.0, 4.0)))
+            corrupt_w.append(np.nan if k % 8 < 4 else np.inf)
+    # splice each corrupt beat into a random slot, clean order intact
+    slots = np.sort(rng.integers(0, len(times) + 1, n_bad))
+    mixed_t = np.insert(np.asarray(times, float), slots, corrupt_t)
+    mixed_w = np.insert(np.asarray(works, float), slots, corrupt_w)
+
+    dirty = HeartbeatAggregator()
+    dirty.beat_many(mixed_t, mixed_w)
+    clean = HeartbeatAggregator()
+    clean.beat_many(times, works)
+
+    assert dirty.drops == n_bad
+    assert clean.drops == 0
+    for t_i in (1.0, 2.0, 3.0, 4.5):
+        assert dirty.progress(t_i) == clean.progress(t_i)
+    # the counter survives a state round-trip
+    redo = HeartbeatAggregator()
+    redo.load_state_dict(dirty.state_dict())
+    assert redo.drops == n_bad

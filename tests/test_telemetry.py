@@ -48,3 +48,34 @@ def test_append_entry_merges_without_clobbering(tmp_path, monkeypatch):
     data = json.loads(path.read_text())
     assert data["entries"]["fig8"]["warm_s"] == 3.0
     assert data["entries"]["policy_faceoff"]["warm_s"] == 1.0
+
+
+def test_merge_history_value_sets_field_on_this_commits_row(
+        tmp_path, monkeypatch):
+    """merge_history_value creates this rev's history row if absent,
+    then updates it in place (no duplicate rows), scoped per
+    quick/full mode — and telemetry.run's own row merge must preserve
+    the field (regression: a fresh snapshot row used to clobber it)."""
+    path = tmp_path / "BENCH_sim.json"
+    monkeypatch.setattr(telemetry, "BENCH_PATH", path)
+    monkeypatch.setattr(telemetry, "_git_rev", lambda: "abc1234")
+
+    telemetry.merge_history_value("chaos_guard_gain", 45.5)
+    data = json.loads(path.read_text())
+    assert len(data["history"]) == 1
+    row = data["history"][0]
+    assert row["rev"] == "abc1234" and row["quick"] is True
+    assert row["chaos_guard_gain"] == 45.5
+
+    # second write to the same rev+mode updates in place
+    telemetry.merge_history_value("chaos_guard_gain", 46.0)
+    data = json.loads(path.read_text())
+    assert len(data["history"]) == 1
+    assert data["history"][0]["chaos_guard_gain"] == 46.0
+
+    # a full-mode value lands on its own row
+    telemetry.merge_history_value("chaos_guard_gain", 50.0, quick=False)
+    data = json.loads(path.read_text())
+    assert len(data["history"]) == 2
+    assert {h["quick"]: h["chaos_guard_gain"]
+            for h in data["history"]} == {True: 46.0, False: 50.0}
