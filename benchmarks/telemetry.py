@@ -20,7 +20,18 @@ Entries (each with first-call and warm wall time plus runs/sec):
   best-alternative vs one-shot.
 
 "cold" is the first in-process call: with a warm persistent XLA cache it
-measures trace + cache load, not a from-scratch compile."""
+measures trace + cache load, not a from-scratch compile.
+
+Observability plumbing: every numeric entry field and headline scalar is
+published into the process metrics registry (`repro.obs.metrics`) as
+``bench_entry{entry=,field=}`` / ``bench_headline{key=}`` gauges, and the
+history row / BENCH file values are read back OUT of a registry snapshot
+— the registry is the source of truth, the JSON files are exports. Each
+`run()` also arms the span tracer and writes the registry snapshot
+(``BENCH_metrics.json``) and the chrome trace of the run's executor
+chunk spans (``BENCH_trace.json``) next to BENCH_sim.json, both
+schema-validated before the write (a malformed export fails the
+benchmark loudly)."""
 from __future__ import annotations
 
 import json
@@ -32,8 +43,40 @@ import time
 from pathlib import Path
 
 from benchmarks.common import Row
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_sim.json"
+
+
+def _metrics_path() -> Path:
+    # derived from BENCH_PATH (not cached) so tests that monkeypatch
+    # BENCH_PATH get all three exports in the same sandbox dir
+    return BENCH_PATH.with_name("BENCH_metrics.json")
+
+
+def _trace_path() -> Path:
+    return BENCH_PATH.with_name("BENCH_trace.json")
+
+
+def _publish_entry(name: str, payload: dict) -> None:
+    """Mirror an entry's numeric fields into the registry
+    (``bench_entry{entry=,field=}``)."""
+    g = obs_metrics.get_registry().gauge(
+        "bench_entry", "numeric benchmark entry fields",
+        labelnames=("entry", "field"))
+    for k, v in payload.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            g.set(float(v), entry=name, field=k)
+
+
+def _entry_fields_from_snapshot(snap: dict, field: str) -> dict:
+    """{entry: value} for one field of every published bench_entry."""
+    m = snap.get("metrics", {}).get("bench_entry")
+    if m is None:
+        return {}
+    return {s["labels"]["entry"]: s["value"] for s in m["samples"]
+            if s["labels"].get("field") == field}
 
 
 def _timed_entry(fn, n_runs: int) -> dict:
@@ -228,9 +271,21 @@ def append_entry(name: str, payload: dict) -> None:
     """Merge one named entry into BENCH_sim.json (creating it if needed)
     without disturbing the other entries — the hook other benchmark
     modules (e.g. policy_faceoff) use to persist machine-readable
-    results."""
+    results. Numeric fields flow through the metrics registry: they are
+    published as ``bench_entry`` gauges and the written values are read
+    back out of a registry snapshot, so the JSON file and the exported
+    metrics snapshot can never disagree."""
+    _publish_entry(name, payload)
+    snap = obs_metrics.get_registry().snapshot()
+    fields = {s["labels"]["field"]: s["value"]
+              for s in snap["metrics"]["bench_entry"]["samples"]
+              if s["labels"]["entry"] == name} \
+        if "bench_entry" in snap.get("metrics", {}) else {}
     data = _read_bench()
-    data.setdefault("entries", {})[name] = payload
+    data.setdefault("entries", {})[name] = {
+        k: fields.get(k, v) if isinstance(v, (int, float))
+        and not isinstance(v, bool) else v
+        for k, v in payload.items()}
     BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
 
 
@@ -275,9 +330,20 @@ def merge_history_value(key: str, value, quick: bool = True) -> None:
     deduped via `_merge_history`, creating the row if the telemetry
     snapshot has not run yet) — how benchmark modules (fig9_chaos's
     ``chaos_guard_gain``) record a headline scalar in the cross-PR
-    trajectory without owning the whole row."""
+    trajectory without owning the whole row. Numeric headlines are
+    published as ``bench_headline{key=}`` gauges and the stored value is
+    read back from a registry snapshot (the registry is the source of
+    truth; non-numeric values bypass it)."""
     import datetime
 
+    if isinstance(value, (int, float)) and not isinstance(value, bool):
+        reg = obs_metrics.get_registry()
+        reg.gauge("bench_headline", "headline benchmark scalars",
+                  labelnames=("key",)).set(float(value), key=key)
+        value = next(
+            s["value"] for s in
+            reg.snapshot()["metrics"]["bench_headline"]["samples"]
+            if s["labels"]["key"] == key)
     data = _read_bench()
     rev = _git_rev()
     hist = list(data.get("history", []))
@@ -297,8 +363,20 @@ def merge_history_value(key: str, value, quick: bool = True) -> None:
 def run(quick: bool = True):
     import datetime
 
-    data = collect(quick)
+    # arm the span tracer for the whole collection pass: the chunked /
+    # sharded sweep layouts ride repro.core.executor.run_grid, whose
+    # per-chunk prepare/compute/transfer/merge spans become the
+    # BENCH_trace.json export
+    tracer = obs_trace.get_tracer()
+    tracer.clear()
+    obs_trace.enable(True)
+    try:
+        data = collect(quick)
+    finally:
+        obs_trace.enable(False)
     fresh = data["entries"]
+    for name, e in fresh.items():
+        _publish_entry(name, e)
     # keep entries appended by OTHER modules; prune stale/renamed
     # telemetry-owned names so the record stays a snapshot of this run
     prev_data = _read_bench()
@@ -310,11 +388,16 @@ def run(quick: bool = True):
     # across PRs instead of being clobbered by each snapshot
     rev = _git_rev()
     hist_prev = list(prev_data.get("history", []))
+    # headline plumbing reads from the registry SNAPSHOT, not the raw
+    # collect() dict: the history row records exactly what the exported
+    # metrics say
+    snap = obs_metrics.get_registry().snapshot()
+    warm_from_snap = _entry_fields_from_snapshot(snap, "warm_s")
     row = {"rev": rev,
            "date": datetime.datetime.now(datetime.timezone.utc)
            .strftime("%Y-%m-%dT%H:%M:%SZ"),
            "quick": quick,
-           "warm_s": {k: v["warm_s"] for k, v in fresh.items()}}
+           "warm_s": {k: warm_from_snap[k] for k in fresh}}
     # keep extra fields other modules set on this commit's row via
     # merge_history_value (chaos_guard_gain): the snapshot refreshes its
     # own keys without clobbering theirs
@@ -335,10 +418,25 @@ def run(quick: bool = True):
         raise RuntimeError(
             f"telemetry append skipped: no history row for rev {rev} "
             f"in {BENCH_PATH}")
+    # export the observability twins next to BENCH_sim.json, both
+    # validated BEFORE writing — a malformed export is a loud benchmark
+    # failure, same contract as the history self-verify above
+    obs_metrics.validate_snapshot(snap)
+    obs_metrics.get_registry().write_snapshot(_metrics_path())
+    trace_doc = tracer.to_chrome()
+    obs_trace.validate_chrome_trace(trace_doc, require_spans=True)
+    _trace_path().write_text(json.dumps(trace_doc) + "\n")
+    n_spans = sum(1 for e in trace_doc["traceEvents"]
+                  if e.get("ph") == "X")
     rows: list[Row] = []
     for name, e in fresh.items():
         rows.append((f"telemetry/{name}", e["warm_s"] * 1e6,
                      f"cold={e['cold_s']}s;warm={e['warm_s']}s;"
                      f"runs_per_sec={e['runs_per_sec']}"))
     rows.append(("telemetry/written", 0.0, str(BENCH_PATH)))
+    rows.append(("telemetry/metrics_snapshot", 0.0,
+                 f"{_metrics_path().name}:"
+                 f"{len(snap.get('metrics', {}))}metrics"))
+    rows.append(("telemetry/trace", 0.0,
+                 f"{_trace_path().name}:{n_spans}spans"))
     return rows

@@ -33,11 +33,15 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import time
 import warnings
 from typing import Any, Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 logger = logging.getLogger("repro.core.executor")
 
@@ -169,7 +173,14 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
     and dropped. Returns ``(merged | None, ExecState)``; ``merged`` is
     None when a consume hook ran or the state is still incomplete
     (``stop_after=`` cut the call short — pass the state back in to
-    continue across the chunk boundary)."""
+    continue across the chunk boundary).
+
+    Observability: chunk/run/resume counters and a runs-per-second
+    gauge publish into the process metrics registry, and when the span
+    tracer is enabled (`repro.obs.trace.enable()`) every chunk emits
+    prepare/compute/transfer/merge spans with device ids — the first
+    chunk of a freshly wrapped engine is marked ``cold`` (its compute
+    span includes XLA compilation)."""
     chunk = int(chunk_size) if chunk_size else n_runs
     chunk = max(1, min(chunk, n_runs))
     devs = resolve_devices(devices)
@@ -183,6 +194,8 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
         # half-finished state's buffers
         fingerprint += ":" + _digest(batched, shared)
 
+    reg = obs_metrics.get_registry()
+    tracer = obs_trace.get_tracer()
     if state is None:
         state = ExecState(n_runs=n_runs, chunk=chunk,
                           done=np.zeros((n_chunks,), bool),
@@ -191,47 +204,88 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
         raise ValueError(f"resume state was built for grid "
                          f"{state.fingerprint}, this call is "
                          f"{fingerprint}")
+    elif state.done.any():
+        reg.counter("executor_resumes_total",
+                    "run_grid calls resumed from partial ExecState"
+                    ).inc()
 
+    cold = (fn, devs, donate, wrap) not in _COMPILED and wrap != "none"
     wrapped = _compiled(fn, len(shared), devs, donate, wrap)
+    dev_ids = [d.id for d in (devs or jax.local_devices()[:1])]
     leaves, treedef = jax.tree_util.tree_flatten(batched)
     ran = 0
-    for ci in range(n_chunks):
-        if state.done[ci]:
-            continue
-        if stop_after is not None and ran >= stop_after:
-            return None, state
-        lo, hi = ci * chunk, min((ci + 1) * chunk, n_runs)
-        pad = chunk - (hi - lo)
-        chunk_in = jax.tree_util.tree_unflatten(
-            treedef, [_pad_rows(np.asarray(x[lo:hi]), pad)
-                      for x in leaves])
-        with warnings.catch_warnings():
-            # small parameter rows rarely alias an output buffer; the
-            # donation win is the big per-chunk key/trace buffers
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            out = jax.device_get(wrapped(chunk_in, *shared))
-        out = jax.tree_util.tree_map(lambda x: x[:hi - lo], out)
-        if consume is not None:
-            # device_get on CPU can return zero-copy VIEWS of device
-            # buffers; once this chunk's arrays are dropped the
-            # allocator reuses that memory (donation makes it certain),
-            # so anything handed outward must own its storage
-            consume(lo, hi,
-                    jax.tree_util.tree_map(lambda x: np.array(x), out))
-        else:
-            if state.buffers is None:
-                state.buffers = jax.tree_util.tree_map(
-                    lambda x: np.empty((n_runs,) + x.shape[1:],
-                                       x.dtype), out)
+    runs_done = 0
+    t0 = time.perf_counter()
+    # ONE scoped filter installation around the whole chunk loop (and
+    # restored on exit, early returns included): user warning filters
+    # are never mutated module-wide, and the hot loop stops
+    # saving/restoring global filter state once per chunk
+    with warnings.catch_warnings():
+        # small parameter rows rarely alias an output buffer; the
+        # donation win is the big per-chunk key/trace buffers
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        stopped = False
+        for ci in range(n_chunks):
+            if state.done[ci]:
+                continue
+            if stop_after is not None and ran >= stop_after:
+                stopped = True
+                break
+            lo, hi = ci * chunk, min((ci + 1) * chunk, n_runs)
+            pad = chunk - (hi - lo)
+            with tracer.span("executor/prepare", chunk=ci, lo=lo, hi=hi,
+                             pad=pad, devices=dev_ids):
+                chunk_in = jax.tree_util.tree_unflatten(
+                    treedef, [_pad_rows(np.asarray(x[lo:hi]), pad)
+                              for x in leaves])
+            with tracer.span("executor/compute", chunk=ci, lo=lo, hi=hi,
+                             devices=dev_ids, cold=cold and ran == 0):
+                out = wrapped(chunk_in, *shared)
+                if tracer.enabled:
+                    # async dispatch would defer the wait to device_get
+                    # and book compute time under the transfer span
+                    out = jax.block_until_ready(out)
+            with tracer.span("executor/transfer", chunk=ci,
+                             devices=dev_ids):
+                out = jax.device_get(out)
+            out = jax.tree_util.tree_map(lambda x: x[:hi - lo], out)
+            with tracer.span("executor/merge", chunk=ci, lo=lo, hi=hi,
+                             consume=consume is not None):
+                if consume is not None:
+                    # device_get on CPU can return zero-copy VIEWS of
+                    # device buffers; once this chunk's arrays are
+                    # dropped the allocator reuses that memory (donation
+                    # makes it certain), so anything handed outward must
+                    # own its storage
+                    consume(lo, hi, jax.tree_util.tree_map(
+                        lambda x: np.array(x), out))
+                else:
+                    if state.buffers is None:
+                        state.buffers = jax.tree_util.tree_map(
+                            lambda x: np.empty((n_runs,) + x.shape[1:],
+                                               x.dtype), out)
 
-            def fill(buf, x):
-                buf[lo:hi] = x
-                return buf
+                    def fill(buf, x):
+                        buf[lo:hi] = x
+                        return buf
 
-            jax.tree_util.tree_map(fill, state.buffers, out)
-        state.done[ci] = True
-        ran += 1
+                    jax.tree_util.tree_map(fill, state.buffers, out)
+            state.done[ci] = True
+            ran += 1
+            runs_done += hi - lo
+    if ran:
+        reg.counter("executor_chunks_total",
+                    "grid chunks executed").inc(ran)
+        reg.counter("executor_runs_total",
+                    "grid runs executed").inc(runs_done)
+        elapsed = time.perf_counter() - t0
+        if elapsed > 0:
+            reg.gauge("executor_last_runs_per_sec",
+                      "throughput of the most recent run_grid call"
+                      ).set(runs_done / elapsed)
+    if stopped:
+        return None, state
     merged = state.buffers if (consume is None and state.complete) \
         else None
     return merged, state

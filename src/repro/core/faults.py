@@ -49,6 +49,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 FAULT_KINDS = ("none", "hb_dropout", "hb_stale", "meter_freeze",
                "meter_bias", "meter_spike", "act_stuck", "act_quant",
                "act_delay", "crash")
@@ -270,7 +272,9 @@ class FaultyActuator:
     biased/spiked readings on `read_power`. Drive the clock with
     `tick(t)` each control period (the NRM's `_t`). Crash windows read
     as zero power and swallow commands. Duck-typed: everything else
-    delegates to the wrapped actuator."""
+    delegates to the wrapped actuator. Every perturbation actually
+    applied increments the per-kind ``faults_injected_total`` counter
+    in the process metrics registry."""
 
     def __init__(self, inner, schedule: FaultSchedule, seed: int = 0):
         self.inner = inner
@@ -280,6 +284,12 @@ class FaultyActuator:
         self._prev_cmd: Optional[float] = None
         self._last_applied: Optional[float] = None
         self._frozen: Optional[float] = None
+        # per-kind injection counter, cached so the per-period hot path
+        # is one dict op, not a registry lookup under the lock
+        self._injected = obs_metrics.get_registry().counter(
+            "faults_injected_total",
+            "fault perturbations actually applied by FaultyActuator",
+            labelnames=("kind",))
 
     def tick(self, t: float) -> None:
         self._t = float(t)
@@ -296,6 +306,7 @@ class FaultyActuator:
             cmd, self._prev_cmd = (
                 self._prev_cmd if self._prev_cmd is not None else cmd,
                 float(pcap))
+            self._injected.inc(kind="act_delay")
         else:
             self._prev_cmd = float(pcap)
         w = self._chan("act_quant")
@@ -303,12 +314,15 @@ class FaultyActuator:
             lo = getattr(getattr(self.inner, "profile", None),
                          "pcap_min", 0.0)
             cmd = lo + round((cmd - lo) / max(w.p1, 1e-9)) * w.p1
+            self._injected.inc(kind="act_quant")
         w = self._chan("act_stuck")
         if w is not None:
             cmd = (w.p1 if w.p1 else
                    self._last_applied if self._last_applied is not None
                    else cmd)
+            self._injected.inc(kind="act_stuck")
         if self._chan("crash") is not None:
+            self._injected.inc(kind="crash")
             return  # a crashed tenant's runtime takes no commands
         self._last_applied = cmd
         self.inner.set_pcap(cmd)
@@ -319,15 +333,18 @@ class FaultyActuator:
         true = float(self.inner.read_power())
         w = self._chan("meter_freeze")
         if w is not None:
+            self._injected.inc(kind="meter_freeze")
             return self._frozen if self._frozen is not None else true
         self._frozen = true
         v = true
         w = self._chan("meter_bias")
         if w is not None:
             v += w.p1
+            self._injected.inc(kind="meter_bias")
         w = self._chan("meter_spike")
         if w is not None and self._rng.random() < (w.p1 or 1.0):
             v = w.p2 if w.p2 else float("nan")
+            self._injected.inc(kind="meter_spike")
         return v
 
     def drop_heartbeat(self) -> bool:
@@ -335,7 +352,10 @@ class FaultyActuator:
         if self._chan("crash") is not None:
             return True
         w = self._chan("hb_dropout")
-        return w is not None and self._rng.random() < (w.p1 or 1.0)
+        if w is not None and self._rng.random() < (w.p1 or 1.0):
+            self._injected.inc(kind="hb_dropout")
+            return True
+        return False
 
     def __getattr__(self, name):
         return getattr(self.inner, name)

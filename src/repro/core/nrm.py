@@ -37,6 +37,8 @@ from repro.core.plant import PROFILES, PlantProfile, plant_init, plant_step
 from repro.core.signals import HeartbeatAggregator
 from repro.core.workloads.detect import (DetectorConfig, detect_init,
                                          detect_step, detector_values)
+from repro.obs import events as evt
+from repro.obs import metrics as obs_metrics
 
 
 class PowerActuator:
@@ -125,6 +127,13 @@ class NRM:
                              else guard))
         self._guard_state = None
         self._guard_vals = None
+        # host-side decision stream (SRC_NRM): live detector alarms and
+        # guard-mode transitions seen by control_step; run_simulated's
+        # in-scan timeline lives in the packed ring below instead
+        self.events = evt.EventLog()
+        # packed flight-recorder ring threaded across run_simulated
+        # segments (None until a record_events= run)
+        self._event_state = None
         # packed detector/policy parameter vectors are pure functions of
         # (config, profile, gains): cached here, rebuilt on calibrate()
         self._det_vals = None
@@ -215,6 +224,7 @@ class NRM:
         progress = self.hb.progress(self._t)
         det_vals, det_state = self._det_pack()
         gvals, gstate = self._guard_pack()
+        prev_gmode = 0.0 if gstate is None else float(gstate[flt.G_MODE])
         gmode = 0.0
         if self._policy is not None:
             if self._policy_vals is None:
@@ -296,12 +306,47 @@ class NRM:
                             phase_change=detected,
                             guard_mode=int(float(gmode)))
         self.records.append(rec)
+        # observability: registry counters/gauges plus the host decision
+        # stream — edge-triggered like the in-scan recorder, so one
+        # sustained failsafe reads as one entry, not one per period
+        reg = obs_metrics.get_registry()
+        reg.counter("nrm_control_steps_total",
+                    "live control periods executed").inc()
+        reg.gauge("nrm_pcap_watts",
+                  "cap applied by the last control period"
+                  ).set(self._pcap_applied)
+        reg.gauge("nrm_progress",
+                  "heartbeat progress seen by the last control period"
+                  ).set(float(progress))
+        if detected:
+            reg.counter("nrm_detector_alarms_total",
+                        "live change-point detector alarms").inc()
+            self.events.append(self._t, evt.EV_DETECTOR_ALARM,
+                               evt.SRC_NRM,
+                               (float(progress), self._pcap_applied))
+        if gvals is not None:
+            gmode_f = float(gmode)
+            if gmode_f >= flt.GUARD_HOLD > prev_gmode:
+                self.events.append(self._t, evt.EV_GUARD_HOLD,
+                                   evt.SRC_NRM,
+                                   (prev_gmode, self._pcap_applied))
+            if gmode_f >= flt.GUARD_FAILSAFE > prev_gmode:
+                reg.counter("nrm_failsafe_entries_total",
+                            "live guard failsafe entries").inc()
+                self.events.append(self._t, evt.EV_GUARD_FAILSAFE,
+                                   evt.SRC_NRM,
+                                   (prev_gmode, self._pcap_applied))
+            if prev_gmode >= flt.GUARD_HOLD > gmode_f:
+                self.events.append(self._t, evt.EV_GUARD_RECOVER,
+                                   evt.SRC_NRM,
+                                   (prev_gmode, self._pcap_applied))
         return rec
 
     # ---- full simulated run (paper evaluation setup) -----------------------
     def run_simulated(self, total_work: float, max_time: float = 3600.0,
                       seed: int = 0,
-                      faults: Optional[flt.FaultSchedule] = None
+                      faults: Optional[flt.FaultSchedule] = None,
+                      record_events: Union[None, bool, int] = None
                       ) -> Dict[str, np.ndarray]:
         """Closed loop against the simulated plant until work completes.
 
@@ -312,7 +357,14 @@ class NRM:
         or policy, plant, last measurement, RNG) is threaded through, so
         repeated calls continue where the last run stopped. The per-step
         Python loop (`_run_simulated_python`) remains only as the
-        equivalence oracle."""
+        equivalence oracle.
+
+        ``record_events=True`` (or a ring size) arms the in-scan flight
+        recorder; the packed ring is threaded across calls like the
+        estimator state, so a later segment keeps appending to the same
+        timeline (once armed, subsequent calls keep recording unless
+        ``record_events=False``). Decode the current timeline with
+        `flight_events()`."""
         assert isinstance(self.actuator, SimulatedPowerActuator)
         from repro.core import policies as pol
         from repro.core import sim
@@ -347,6 +399,16 @@ class NRM:
             kwargs["guard"] = self._guard
         if faults is not None:
             kwargs["faults"] = faults
+        ev_state = self._event_state
+        if record_events is None and ev_state is not None:
+            # a previous segment armed the recorder: keep recording at
+            # the same ring size so the in-ring total stays monotonic
+            record_events = evt.ring_capacity(np.asarray(ev_state))
+        if record_events is None or record_events is False:
+            ev_state = None
+            self._event_state = None
+        else:
+            kwargs["record_events"] = record_events
         init = sim.resume_init(self.actuator.state,
                                self.controller.state,
                                self.actuator._pcap, rls=rls,
@@ -354,7 +416,8 @@ class NRM:
                                det_state=self._det_state,
                                guard_state=(self._guard_state
                                             if self._guard is not None
-                                            else None))
+                                            else None),
+                               event_state=ev_state)
         # derive the engine's key from the actuator RNG (advanced after
         # every run) so a resumed segment at the same seed does not
         # replay the previous segment's noise stream
@@ -378,6 +441,9 @@ class NRM:
         if res.guard_state is not None:
             # guard watchdog continues live where the scan ended
             self._guard_state = jnp.asarray(res.guard_state)
+        if res.event_state is not None:
+            # flight recorder continues where the scan ended
+            self._event_state = np.asarray(res.event_state)
         self.actuator.state = jax.tree_util.tree_map(
             jnp.asarray, res.plant_state)
         self.actuator._pcap = res.pcap
@@ -402,6 +468,14 @@ class NRM:
         self.actuator._key = jax.random.fold_in(
             jax.random.fold_in(self.actuator._key, seed), res.n_steps)
         return res.traces
+
+    def flight_events(self) -> list:
+        """Decoded in-scan flight-recorder timeline (the last-N events
+        across every recorded `run_simulated` segment); [] before the
+        first record_events= run."""
+        if self._event_state is None:
+            return []
+        return evt.decode_ring(self._event_state)
 
     def _run_simulated_python(self, total_work: float,
                               max_time: float = 3600.0,
@@ -468,6 +542,9 @@ class NRM:
         if self._guard_state is not None:
             d["guard_state"] = np.asarray(self._guard_state,
                                           np.float32).tolist()
+        if self._event_state is not None:
+            d["event_state"] = np.asarray(self._event_state,
+                                          np.float32).tolist()
         d["pcap_applied"] = self._pcap_applied
         # the heartbeat ring buffer IS run state: without it, the first
         # post-restore control period sees zero progress and commands a
@@ -506,6 +583,11 @@ class NRM:
                              "GuardConfig before loading")
         self._guard_state = (None if gs is None
                              else jnp.asarray(gs, jnp.float32))
+        es = d.get("event_state")
+        # restore OR reset, like the rest: no config gate — recording is
+        # a run_simulated argument, not an NRM constructor choice
+        self._event_state = (None if es is None
+                             else np.asarray(es, np.float32))
         self._pcap_applied = float(d.get("pcap_applied",
                                          self.profile.pcap_max))
         hb = d.get("heartbeats")

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
@@ -50,6 +51,8 @@ from repro.core.controller import PIGains, PIState, pi_init
 from repro.core.plant import PROFILES, PlantProfile
 from repro.core.policies.pi import PI_RLS_HI, PI_RLS_LO, PIPolicy, pi_pack
 from repro.core.signals import TenantHeartbeatStore
+from repro.obs import events as evt
+from repro.obs import metrics as obs_metrics
 from repro.core.workloads.detect import (DET_PARAM_DIM, DET_STATE_DIM,
                                          DetectorConfig, detect_init,
                                          detect_step, detector_values)
@@ -333,6 +336,11 @@ class PlaneSnapshot:
     guard_vals: Optional[np.ndarray] = None
     guard_state: Optional[np.ndarray] = None
     guard_on: Optional[np.ndarray] = None
+    # decision-stream incident history (EventLog.state_dict): carried so
+    # a kill/resume keeps the plane's quarantine/alarm timeline; NOT
+    # part of the digest — it is observability metadata, not control
+    # state, and old snapshots without it must keep their fingerprint
+    events: Optional[dict] = None
     fingerprint: str = ""
 
     def digest(self) -> str:
@@ -394,6 +402,11 @@ class ControlPlane:
         self._alloc(cap)
         self.store = TenantHeartbeatStore(cap, max_beats=max_beats)
         self.last: Optional[Dict[str, np.ndarray]] = None
+        # decision stream: tenant lifecycle + per-tenant guard/detector
+        # incidents (quarantine entry/exit, alarms), bounded
+        # oldest-first like the in-scan ring; a snapshot carries it
+        self.events = evt.EventLog()
+        self._drops_published = 0.0
 
     # ---- storage ----------------------------------------------------------
     def _alloc(self, cap: int) -> None:
@@ -538,12 +551,18 @@ class ControlPlane:
         self._alive[slots] = True
         for s in slots:
             self.store.clear_row(int(s))
+        # one stream record per ADD CALL (a 100k-row batch add is one
+        # decision, not 100k), payload = (count, first slot)
+        self.events.append(self._t, evt.EV_TENANT_ADDED, evt.SRC_PLANE,
+                           (n, int(slots[0])))
         return out_ids
 
     def remove_tenant(self, tenant_id: Any) -> None:
         """Unregister a tenant; its row is cleared and recycled. Every
         OTHER tenant's controller/detector/window state is untouched."""
         s = self._slots.pop(tenant_id)
+        self.events.append(self._t, evt.EV_TENANT_REMOVED, evt.SRC_PLANE,
+                           (1, int(s)))
         self._alive[s] = False
         self._det_on[s] = 0.0
         self._guard_on[s] = 0.0
@@ -585,7 +604,14 @@ class ControlPlane:
         decision/telemetry stream) while the plane's state rows update
         in place. Returns the full decision dict (slot-indexed arrays:
         ``pcap``, ``applied``, ``phase_change``, ``progress``).
+
+        Observability: per-tenant detector alarms and guard-mode
+        crossings (quarantine entry/exit) append to ``self.events``,
+        and the tick publishes into the process metrics registry
+        (`plane_ticks_total`, `plane_tick_seconds`, tenant/quarantine
+        gauges, `plane_ingest_drops_total`).
         """
+        t_wall = time.perf_counter()
         if now is not None:
             dt = max(now - self._t, 1e-6) if dt is None else dt
             self._t = now
@@ -613,6 +639,7 @@ class ControlPlane:
         if guarded:
             rows.update(guard_vals=self._gvals, guard_state=self._gstate,
                         guard_on=self._guard_on)
+            prev_mode = self._gstate[:, flt.G_MODE].copy()
         fn = tick_fn(self._branches, guarded)
         decisions = {"pcap": np.empty(cap, np.float32),
                      "applied": np.empty(cap, np.float32),
@@ -636,6 +663,48 @@ class ControlPlane:
                           donate=False, consume=_merge)
         decisions["progress"] = progress
         self.last = decisions
+        # decision stream: edge-triggered incidents only (np.nonzero over
+        # boolean masks — the common all-healthy tick appends nothing)
+        alarms = (decisions["phase_change"] > 0) & (self._det_on > 0.5) \
+            & self._alive
+        for s in np.nonzero(alarms)[0]:
+            self.events.append(self._t, evt.EV_DETECTOR_ALARM,
+                               evt.SRC_PLANE, (1, int(s)))
+        if guarded:
+            mode = self._gstate[:, flt.G_MODE]
+            armed = (self._guard_on > 0.5) & self._alive
+            q_in = armed & (mode >= flt.GUARD_FAILSAFE) \
+                & (prev_mode < flt.GUARD_FAILSAFE)
+            q_out = armed & (mode < flt.GUARD_FAILSAFE) \
+                & (prev_mode >= flt.GUARD_FAILSAFE)
+            held = armed & (mode >= flt.GUARD_HOLD) \
+                & (prev_mode < flt.GUARD_HOLD)
+            for mask, code in ((held, evt.EV_GUARD_HOLD),
+                               (q_in, evt.EV_QUARANTINE_ENTER),
+                               (q_out, evt.EV_QUARANTINE_EXIT)):
+                for s in np.nonzero(mask)[0]:
+                    self.events.append(self._t, code, evt.SRC_PLANE,
+                                       (1, int(s)))
+        reg = obs_metrics.get_registry()
+        reg.counter("plane_ticks_total",
+                    "control-plane ticks executed").inc()
+        reg.gauge("plane_tenants", "live tenant rows").set(
+            float(self._alive.sum()))
+        n_quar = (float(((self._gstate[:, flt.G_MODE]
+                          >= flt.GUARD_FAILSAFE)
+                         & (self._guard_on > 0.5) & self._alive).sum())
+                  if guarded else 0.0)
+        reg.gauge("plane_quarantined",
+                  "tenants held in guard fail-safe").set(n_quar)
+        drops = float(self.store._drops.sum())
+        if drops > self._drops_published:
+            reg.counter("plane_ingest_drops_total",
+                        "heartbeats rejected by ingest sanitization"
+                        ).inc(drops - self._drops_published)
+            self._drops_published = drops
+        reg.histogram("plane_tick_seconds",
+                      "wall-clock latency of one plane tick").observe(
+            time.perf_counter() - t_wall)
         return decisions
 
     def quarantined(self) -> List[Any]:
@@ -662,7 +731,8 @@ class ControlPlane:
             max_beats=self.store.max_beats,
             guard_vals=self._gvals.copy(),
             guard_state=self._gstate.copy(),
-            guard_on=self._guard_on.copy())
+            guard_on=self._guard_on.copy(),
+            events=self.events.state_dict())
         snap.fingerprint = snap.digest()
         return snap
 
@@ -698,4 +768,6 @@ class ControlPlane:
         plane._pcap[:] = snap.pcap
         plane._alive[:] = snap.alive
         plane.store.load_state_dict(snap.store_state)
+        if snap.events is not None:
+            plane.events.load_state_dict(snap.events)
         return plane

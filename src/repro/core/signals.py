@@ -22,6 +22,8 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 
 class TenantHeartbeatStore:
     """Tenant-batched online Eq. 1: N ring buffers, one vectorized pass.
@@ -94,6 +96,10 @@ class TenantHeartbeatStore:
             raise ValueError("tenant_ids and times must match in length")
         if not len(t):
             return
+        obs_metrics.get_registry().counter(
+            "heartbeat_beats_ingested_total",
+            "beats submitted to the tenant store (pre-sanitization)"
+            ).inc(len(t))
         N, B = self._t.shape
         if len(ids) and (ids.min() < 0 or ids.max() >= N):
             raise IndexError("tenant id out of range")
@@ -104,6 +110,10 @@ class TenantHeartbeatStore:
         bad = ~np.isfinite(t) | ~np.isfinite(w) | (w < 0)
         if bad.any():
             np.add.at(self._drops, ids[bad], 1)
+            obs_metrics.get_registry().counter(
+                "heartbeat_ingest_drops_total",
+                "beats rejected at ingest (non-finite time/work)"
+                ).inc(int(bad.sum()))
             ids, t, w = ids[~bad], t[~bad], w[~bad]
             if not len(t):
                 return

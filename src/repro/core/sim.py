@@ -62,6 +62,7 @@ import numpy as np
 
 from repro.core import faults as flt
 from repro.core import plane
+from repro.obs import events as evt
 from repro.core import policies as pol
 from repro.core.adaptive import (RLSConfig, RLSState, rls_init, rls_pack,
                                  rls_unpack, rls_values)
@@ -220,6 +221,11 @@ class _Carry(NamedTuple):
     # packed guard state (faults.GUARD_STATE_DIM,) when the guarded
     # degradation layer runs, else None
     guard: Optional[jnp.ndarray] = None
+    # packed flight-recorder ring (repro.obs.events layout) when event
+    # recording is on, else None — same None-has-no-leaves contract, so
+    # recorder-off carries keep the exact pre-recorder structure (and
+    # compiled graph / bitstream)
+    events: Optional[jnp.ndarray] = None
 
 
 # state-vector slots of the PI branches; repro.core.policies.pi owns the
@@ -230,7 +236,7 @@ _PI_RLS_LO, _PI_RLS_HI = PI_RLS_LO, PI_RLS_HI
 def _default_init(profile: PlantProfile, gains: PIGains,
                   policy=("pi",), policy_vals=None, schedule=None,
                   det_vals=None, typed_pi: bool = False,
-                  faults=None, guard=None) -> _Carry:
+                  faults=None, guard=None, n_events: int = 0) -> _Carry:
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     # a scheduled run starts in its phase-0 plant (the base profile only
@@ -252,13 +258,15 @@ def _default_init(profile: PlantProfile, gains: PIGains,
                        else detect_init(det_vals, gains)),
                   fstate=(None if faults is None
                           else flt.fault_state_init(profile)),
-                  guard=(None if guard is None else flt.guard_init()))
+                  guard=(None if guard is None else flt.guard_init()),
+                  events=(evt.ring_init(n_events) if n_events else None))
 
 
 def resume_init(plant: PlantState, pi: PIState, pcap,
                 rls: Optional[RLSState] = None,
                 policy_state=None, det_state=None, t0=0.0,
-                fault_state=None, guard_state=None) -> _Carry:
+                fault_state=None, guard_state=None,
+                event_state=None) -> _Carry:
     """Carry that resumes a run from existing plant/controller (and
     optionally RLS estimator) state — the NRM delegation path; the
     heartbeat window and the per-run summaries start fresh. Pass
@@ -266,7 +274,11 @@ def resume_init(plant: PlantState, pi: PIState, pcap,
     `SimResult.policy_state`) to resume a non-PI policy; otherwise the
     PI/RLS states are packed into the PI branch's layout. ``det_state``
     (a packed (DET_STATE_DIM,) vector from `SimResult.detector_state`)
-    resumes the change-point detector.
+    resumes the change-point detector. ``event_state`` (the packed ring
+    from `SimResult.event_state`) resumes the flight recorder: the next
+    segment keeps appending where the previous one stopped, so the
+    monotonic event total and the surviving incident history span the
+    whole resumed run.
 
     ``t0`` sets the carried sim-time the segment starts at. It defaults
     to 0 (each segment gets its own `max_time` budget — the NRM path),
@@ -292,7 +304,9 @@ def resume_init(plant: PlantState, pi: PIState, pcap,
                   fstate=(None if fault_state is None
                           else jnp.asarray(fault_state, jnp.float32)),
                   guard=(None if guard_state is None
-                         else jnp.asarray(guard_state, jnp.float32)))
+                         else jnp.asarray(guard_state, jnp.float32)),
+                  events=(None if event_state is None
+                          else jnp.asarray(event_state, jnp.float32)))
 
 
 def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
@@ -354,6 +368,10 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
     if typed_pi and (faults is not None or guard is not None):
         raise ValueError("typed_pi is the guard-free fixed-gain PI fast "
                          "path; faults=/guard= need the packed engine")
+    if typed_pi and c.events is not None:
+        raise ValueError("typed_pi is the recorder-free fixed-gain PI "
+                         "fast path; event recording needs the packed "
+                         "engine")
     if policy_vals is None:
         policy_vals = jnp.zeros((pol.POLICY_PARAM_DIM,), jnp.float32)
     if schedule is None:
@@ -512,13 +530,65 @@ def engine_step(profile: PlantProfile, gains: PIGains, c: _Carry,
         out["phase_change"] = change
     if not typed_pi:
         out.update(pol.branch_extras(policy)(pol_s))
+
+    # flight recorder: edge-triggered appends into the carried ring.
+    # Every append is gated on the live mask (and the whole block on the
+    # ring being carried at all), so recorder-off runs keep the exact
+    # pre-recorder graph and a frozen run's ring stays untouched.
+    ev = c.events
+    if ev is not None:
+        live = ~c.done
+        if schedule is not None:
+            prev_phase = ev[evt.H_PREV_PHASE]
+            phase_f = phase_idx.astype(jnp.float32)
+            ev = evt.ring_append(
+                ev, live & (prev_phase >= 0) & (phase_f != prev_phase),
+                c.t, evt.EV_PHASE_FLIP, evt.SRC_SCHEDULE,
+                prev_phase, phase_f)
+            ev = ev.at[evt.H_PREV_PHASE].set(
+                jnp.where(live, phase_f, prev_phase))
+        if faults is not None:
+            prev_f = ev[evt.H_PREV_FAULT]
+            ev = evt.ring_append(ev, live & (f_any > 0) & (prev_f <= 0),
+                                 t, evt.EV_FAULT_ENTER, evt.SRC_FAULTS,
+                                 af.crash, af.hb_drop, af.meter_freeze)
+            ev = evt.ring_append(ev, live & (f_any <= 0) & (prev_f > 0),
+                                 t, evt.EV_FAULT_EXIT, evt.SRC_FAULTS)
+            ev = ev.at[evt.H_PREV_FAULT].set(
+                jnp.where(live, f_any, prev_f))
+        if detector is not None:
+            ev = evt.ring_append(ev, live & (change > 0), t,
+                                 evt.EV_DETECTOR_ALARM, evt.SRC_DETECTOR,
+                                 progress, pcap)
+        if guard is not None:
+            prev_mode = c.guard[flt.G_MODE]
+            stale = guard_s[flt.G_STALE]
+            ev = evt.ring_append(
+                ev, live & (gmode >= flt.GUARD_HOLD)
+                & (prev_mode < flt.GUARD_HOLD),
+                t, evt.EV_GUARD_HOLD, evt.SRC_GUARD, stale, pcap)
+            ev = evt.ring_append(
+                ev, live & (gmode >= flt.GUARD_FAILSAFE)
+                & (prev_mode < flt.GUARD_FAILSAFE),
+                t, evt.EV_GUARD_FAILSAFE, evt.SRC_GUARD, stale, pcap,
+                guard_s[flt.G_N_INVALID])
+            ev = evt.ring_append(
+                ev, live & (gmode < flt.GUARD_HOLD)
+                & (prev_mode >= flt.GUARD_HOLD),
+                t, evt.EV_GUARD_RECOVER, evt.SRC_GUARD, prev_mode, pcap)
+            ev = evt.ring_append(
+                ev, live & (guard_s[flt.G_N_RESETS]
+                            > c.guard[flt.G_N_RESETS]),
+                t, evt.EV_RECOVERY_RESET, evt.SRC_GUARD,
+                guard_s[flt.G_N_RESETS], pcap)
     return _Carry(plant_s, pol_s, pcap, anchor_gap, has_anchor, t,
                   c.steps + (~c.done).astype(jnp.int32), done, summ,
-                  det_s, fstate_n, guard_s), out
+                  det_s, fstate_n, guard_s, ev), out
 
 
 def _scan_core(max_steps: int, collect: bool = True,
-               branches=("pi",), typed_pi: bool = False):
+               branches=("pi",), typed_pi: bool = False,
+               n_events: int = 0):
     """Pure closed-loop run: (profile_vals, gains_vals, policy_vals,
     sched, det_vals, fvals, gvals, init|None, total_work, max_time, dt,
     summary_from, key) -> (traces|None, final_carry). The policy branch
@@ -529,7 +599,9 @@ def _scan_core(max_steps: int, collect: bool = True,
     detector / `FaultValues` / guard parameter vectors; jit separates
     the variants by pytree structure. ``typed_pi`` switches the carried
     policy state to a typed `PIState` (single-branch ('pi',) fast path;
-    an ``init`` carry must then also hold a typed pol)."""
+    an ``init`` carry must then also hold a typed pol). ``n_events`` > 0
+    arms the flight recorder with that many ring slots (static: the ring
+    shape keys the jit cache; 0 keeps the recorder-free carry)."""
 
     def run(profile_vals, gains_vals, policy_vals, sched, det_vals,
             fvals, gvals, init: Optional[_Carry], total_work, max_time,
@@ -537,7 +609,8 @@ def _scan_core(max_steps: int, collect: bool = True,
         profile = _unpack_profile(profile_vals)
         gains = _unpack_gains(gains_vals)
         carry0 = (_default_init(profile, gains, branches, policy_vals,
-                                sched, det_vals, typed_pi, fvals, gvals)
+                                sched, det_vals, typed_pi, fvals, gvals,
+                                n_events)
                   if init is None else init)
 
         def body(c: _Carry, k):
@@ -562,16 +635,18 @@ def _scan_core(max_steps: int, collect: bool = True,
 # traced arrays). The branch tuple keys the policy's static compute
 # graph; all its hyperparameters are traced.
 @functools.lru_cache(maxsize=None)
-def _jit_run(max_steps: int, collect: bool = True, branches=("pi",)):
-    return jax.jit(_scan_core(max_steps, collect, branches))
+def _jit_run(max_steps: int, collect: bool = True, branches=("pi",),
+             n_events: int = 0):
+    return jax.jit(_scan_core(max_steps, collect, branches,
+                              n_events=n_events))
 
 
 @functools.lru_cache(maxsize=None)
 def _jit_sweep_cached(max_steps: int, branches, collect: bool,
                       scheduled: bool, detected: bool,
                       typed_pi: bool = False, det_grid: bool = False,
-                      fault_grid: bool = False):
-    run = _scan_core(max_steps, collect, branches, typed_pi)
+                      fault_grid: bool = False, n_events: int = 0):
+    run = _scan_core(max_steps, collect, branches, typed_pi, n_events)
     f = lambda pv, gv, av, sv, dv, fv, gvl, tw, mt, dt, sf, key: run(
         pv, gv, av, sv, dv, fv, gvl, None, tw, mt, dt, sf, key)
     sched_ax = 0 if scheduled else None
@@ -598,7 +673,7 @@ def _jit_sweep_cached(max_steps: int, branches, collect: bool,
 def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
                scheduled: bool = False, detected: bool = False,
                typed_pi: bool = False, det_grid: bool = False,
-               fault_grid: bool = False):
+               fault_grid: bool = False, n_events: int = 0):
     """Vmapped grid engine. Axis nest (outer->inner): profiles, eps,
     policies, [workloads], [detectors], [faults], seeds; the workload/
     detector/fault axes exist only when ``scheduled`` / ``det_grid`` /
@@ -613,7 +688,7 @@ def _jit_sweep(max_steps: int, branches=("pi",), collect: bool = True,
     return _jit_sweep_cached(max_steps, tuple(branches), bool(collect),
                              bool(scheduled), bool(detected),
                              bool(typed_pi), bool(det_grid),
-                             bool(fault_grid))
+                             bool(fault_grid), int(n_events))
 
 
 _jit_sweep.cache_info = _jit_sweep_cached.cache_info
@@ -624,7 +699,7 @@ _jit_sweep.cache_info = _jit_sweep_cached.cache_info
 @functools.lru_cache(maxsize=None)
 def _flat_core(max_steps: int, branches, collect: bool, scheduled: bool,
                detected: bool, typed_pi: bool = False,
-               guarded: bool = False):
+               guarded: bool = False, n_events: int = 0):
     """Flat-grid engine for the executor: ONE vmap over per-run rows
     (a dict of (N, ...) leaves) instead of the one-shot nest. Every
     run's parameters and key ride in its own row, so ANY slice of the
@@ -633,7 +708,7 @@ def _flat_core(max_steps: int, branches, collect: bool, scheduled: bool,
     ride the batched dict like sched/det; the guard parameter vector is
     grid-wide, so it rides the shared argument tail (``guarded``
     selects the variant)."""
-    run = _scan_core(max_steps, collect, branches, typed_pi)
+    run = _scan_core(max_steps, collect, branches, typed_pi, n_events)
 
     def flat(batched, total_work, max_time, dt, summary_from, *rest):
         gvl = rest[0] if guarded else None
@@ -797,6 +872,17 @@ class SimResult:
     # final packed guard state (guard= runs; faults.G_* slots carry the
     # watchdog counters); resume via resume_init(guard_state=...)
     guard_state: Optional[np.ndarray] = None
+    # flight-recorder timeline (record_events= runs): decoded typed
+    # records, oldest surviving first (see repro.obs.events)
+    events: Optional[list] = None
+    # the packed ring itself; resume via resume_init(event_state=...)
+    event_state: Optional[np.ndarray] = None
+
+    @property
+    def n_events_total(self) -> int:
+        """Monotonic count of every event appended (incl. evicted)."""
+        return (0 if self.event_state is None
+                else evt.ring_total(self.event_state))
 
     @property
     def n_phase_changes(self) -> int:
@@ -832,6 +918,10 @@ class SweepResult:
     # (faults.G_N_FAILSAFE / G_N_INVALID etc. are the fig9 metrics),
     # else None
     guard_state: Optional[jnp.ndarray] = None
+    # per-run packed flight-recorder rings (..., ring_dim) for
+    # record_events= sweeps, else None; decode one run with
+    # repro.obs.events.decode_ring or the whole grid with decode_grid
+    events: Optional[jnp.ndarray] = None
 
     def masked_mean(self, key: str) -> np.ndarray:
         """Per-run mean of a trace over its live steps. For 'progress'
@@ -844,6 +934,20 @@ class SweepResult:
         x = np.asarray(self.traces[key])
         m = np.asarray(self.traces["valid"])
         return (x * m).sum(-1) / np.maximum(m.sum(-1), 1)
+
+
+def _resolve_n_events(record_events: Union[None, bool, int]) -> int:
+    """record_events= sugar -> static ring slot count (0 = recorder
+    off). True picks the default ring; an int sizes it explicitly."""
+    if record_events is None or record_events is False:
+        return 0
+    if record_events is True:
+        return evt.DEFAULT_MAX_EVENTS
+    n = int(record_events)
+    if n < 1:
+        raise ValueError(f"record_events= wants True or a positive ring "
+                         f"size, got {record_events!r}")
+    return n
 
 
 def simulate_closed_loop(profile: Union[str, PlantProfile],
@@ -865,7 +969,8 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                          detector: Optional[DetectorConfig] = None,
                          faults: Optional[flt.FaultSchedule] = None,
                          guard: Union[None, bool,
-                                      flt.GuardConfig] = None
+                                      flt.GuardConfig] = None,
+                         record_events: Union[None, bool, int] = None
                          ) -> SimResult:
     """One fully-jitted closed-loop run (drop-in for NRM.run_simulated).
 
@@ -897,7 +1002,15 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
     ``guard=GuardConfig(...)`` (or ``guard=True`` for the defaults)
     arms the guarded-degradation layer in `plane_step`; traces gain
     `guard_mode` and the final watchdog counters come back in
-    `SimResult.guard_state`."""
+    `SimResult.guard_state`.
+
+    ``record_events=True`` (or an int ring size) arms the in-scan flight
+    recorder (`repro.obs.events`): guard transitions, detector alarms,
+    recovery resets, fault windows and phase flips append timestamped
+    records into a fixed ring riding the carry; `SimResult.events` is
+    the decoded timeline and `SimResult.event_state` the packed ring
+    for resume. Recorder-off runs are bit-for-bit the recorder-free
+    engine (the ring is a None carry field with no pytree leaves)."""
     profile = _resolve(profile)
     if gains is None:
         if epsilon is None:
@@ -968,10 +1081,25 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
     elif init is not None and gvl is None and init.guard is not None:
         raise ValueError("init carries guard state but guard=None; "
                          "pass the GuardConfig so its params are traced")
+    n_events = _resolve_n_events(record_events)
+    if init is not None and n_events and init.events is None:
+        # resume carry predates the recorder: start an empty ring
+        init = init._replace(events=evt.ring_init(n_events))
+    elif init is not None and not n_events and init.events is not None:
+        raise ValueError("init carries a flight-recorder ring but "
+                         "record_events=None; pass record_events so the "
+                         "ring stays a carry citizen")
+    elif (init is not None and init.events is not None
+          and evt.ring_capacity(init.events) != n_events):
+        raise ValueError(
+            f"init ring has {evt.ring_capacity(init.events)} slots but "
+            f"record_events={n_events}; resume with the same ring size "
+            "(the ring shape keys the compiled engine)")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     if key is None:
         key = jax.random.PRNGKey(seed)
-    traces, final = _jit_run(max_steps, collect_traces, (branch,))(
+    traces, final = _jit_run(max_steps, collect_traces, (branch,),
+                             n_events)(
         profile_values(profile), gains_values(gains), pvals, sched, dv,
         fv, gvl, init, jnp.float32(total_work), jnp.float32(max_time),
         jnp.float32(dt), jnp.float32(summary_warmup), key)
@@ -1006,7 +1134,11 @@ def simulate_closed_loop(profile: Union[str, PlantProfile],
                      fault_state=(None if final.fstate is None
                                   else np.asarray(final.fstate)),
                      guard_state=(None if final.guard is None
-                                  else np.asarray(final.guard)))
+                                  else np.asarray(final.guard)),
+                     events=(None if final.events is None
+                             else evt.decode_ring(final.events)),
+                     event_state=(None if final.events is None
+                                  else np.asarray(final.events)))
 
 
 def _sweep_impl(profiles: Union[str, PlantProfile,
@@ -1030,6 +1162,7 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                 faults: Union[None, flt.FaultSchedule,
                               Sequence[flt.FaultSchedule]] = None,
                 guard: Union[None, bool, flt.GuardConfig] = None,
+                record_events: Union[None, bool, int] = None,
                 backend: str = "scan",
                 chunk_size: Optional[int] = None,
                 devices=None,
@@ -1136,11 +1269,18 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         raise ValueError("typed_pi= is the guard-free fixed-gain PI "
                          "fast path; faults=/guard= need the packed "
                          "engine")
+    n_events = _resolve_n_events(record_events)
+    if typed_pi and n_events:
+        raise ValueError("typed_pi= is the recorder-free fixed-gain PI "
+                         "fast path; record_events= needs the packed "
+                         "engine")
     if backend not in ("scan", "pallas", "auto"):
         raise ValueError(f"unknown backend {backend!r}; choose "
                          "'scan', 'pallas' or 'auto'")
+    # capability dispatch: the mega-kernel carry has no recorder ring
+    # (documented fallback — recorded grids ride the scan engine)
     pallas_ok = (branches == ("pi",) and sv is None and dv is None
-                 and fv is None and gvl is None)
+                 and fv is None and gvl is None and n_events == 0)
     if backend == "auto":
         # capability dispatch: the mega-kernel covers the flagship
         # fixed-gain PI path and pays off where it lowers natively; the
@@ -1150,10 +1290,12 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
     elif backend == "pallas" and not pallas_ok:
         raise ValueError(
             "backend='pallas' covers the fixed-gain PI path only "
-            "(static plant, no detector, no faults/guard); this grid "
+            "(static plant, no detector, no faults/guard, no flight "
+            "recorder); this grid "
             f"needs branches={branches}, workloads={sv is not None}, "
             f"detector={dv is not None}, faults={fv is not None}, "
-            f"guard={gvl is not None} — use backend='scan'")
+            f"guard={gvl is not None}, record_events={n_events > 0} — "
+            "use backend='scan'")
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     use_exec = (backend != "scan" or chunk_size is not None
                 or devices is not None or consume is not None
@@ -1162,7 +1304,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
     if not use_exec:
         traces, final = _jit_sweep(max_steps, branches, collect_traces,
                                    sv is not None, dv is not None,
-                                   typed_pi, det_grid, fault_grid)(
+                                   typed_pi, det_grid, fault_grid,
+                                   n_events)(
             pv, gv, av, sv, dv, fv, gvl, jnp.float32(total_work),
             jnp.float32(max_time), jnp.float32(dt),
             jnp.float32(summary_warmup), keys)
@@ -1211,7 +1354,7 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
         else:
             fn = _flat_core(max_steps, branches, collect_traces,
                             sv is not None, dv is not None, typed_pi,
-                            gvl is not None)
+                            gvl is not None, n_events)
             shared = (jnp.float32(total_work), jnp.float32(max_time),
                       jnp.float32(dt), jnp.float32(summary_warmup))
             if gvl is not None:
@@ -1262,14 +1405,16 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                        summary=summary,
                        detections=(None if final.det is None
                                    else final.det[..., DET_N_DETECT]),
-                       guard_state=final.guard
+                       guard_state=final.guard,
+                       events=final.events
                        ), exec_state
 
 
 def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
           dt=1.0, tau_obj=10.0, adaptive=None, policies=None,
           collect_traces=True, summary_warmup=0, workloads=None,
-          detector=None, faults=None, guard=None, *,
+          detector=None, faults=None, guard=None,
+          record_events=None, *,
           backend: str = "scan",
           chunk_size: Optional[int] = None, devices=None,
           typed_pi: bool = False, consume=None
@@ -1319,7 +1464,11 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
     forced resets). `sweep(faults=None, guard=None)` is bit-for-bit the
     pre-faults engine — the fault RNG folds off a separate key and None
     arguments carry no pytree leaves, so the compiled graph is the
-    pre-existing one.
+    pre-existing one. `record_events=` (True or a ring size) arms the
+    flight recorder in every run; `SweepResult.events` then carries the
+    per-run packed rings (decode with `repro.obs.events.decode_grid`) —
+    recorder-off sweeps keep the exact recorder-free executable under
+    the same None-leaves contract.
 
     Execution layer (`repro.core.executor`): with every keyword at its
     default the grid runs ONE-SHOT on the legacy nested-vmap engine —
@@ -1344,7 +1493,8 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
     res, _ = _sweep_impl(profiles, epsilons, seeds, total_work,
                          max_time, dt, tau_obj, adaptive, policies,
                          collect_traces, summary_warmup, workloads,
-                         detector, faults, guard, backend=backend,
+                         detector, faults, guard, record_events,
+                         backend=backend,
                          chunk_size=chunk_size, devices=devices,
                          typed_pi=typed_pi, consume=consume)
     return res
@@ -1354,7 +1504,7 @@ def sweep_resumable(profiles, epsilons, seeds, total_work,
                     max_time=3600.0, dt=1.0, tau_obj=10.0,
                     adaptive=None, policies=None, collect_traces=True,
                     summary_warmup=0, workloads=None, detector=None,
-                    faults=None, guard=None, *,
+                    faults=None, guard=None, record_events=None, *,
                     backend: str = "scan", chunk_size: int,
                     devices=None, typed_pi: bool = False, state=None,
                     stop_after: Optional[int] = None):
@@ -1367,7 +1517,8 @@ def sweep_resumable(profiles, epsilons, seeds, total_work,
     return _sweep_impl(profiles, epsilons, seeds, total_work, max_time,
                        dt, tau_obj, adaptive, policies, collect_traces,
                        summary_warmup, workloads, detector, faults,
-                       guard, backend=backend, chunk_size=chunk_size,
+                       guard, record_events, backend=backend,
+                       chunk_size=chunk_size,
                        devices=devices, typed_pi=typed_pi, state=state,
                        stop_after=stop_after)
 

@@ -1,6 +1,14 @@
 """Fused closed-loop simulation kernel (see kernel.py for the fusion
 story, ref.py for the engine-transcription oracle and the externalized
-noise contract, ops.py for the public `closed_loop_sim` entry)."""
+noise contract, ops.py for the public `closed_loop_sim` entry).
+
+Capability dispatch: the mega-kernel's carry is the fixed plant/PI/
+detector/guard state only — it has NO flight-recorder ring, so
+`sim.sweep(record_events=...)` grids are excluded from the Pallas fast
+path by the `pallas_ok` capability check and ride the scan engine
+instead (exactly like policy branches the kernel doesn't implement).
+Recording is an observability choice, not a numerics one: a recorded
+scan-engine run computes the same trajectories the kernel would."""
 from repro.kernels.closed_loop.ops import closed_loop_sim, draw_noise
 from repro.kernels.closed_loop.ref import closed_loop_ref
 

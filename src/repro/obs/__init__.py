@@ -1,0 +1,16 @@
+"""Observability layer: in-scan flight recorder (`events`), process-wide
+metrics registry (`metrics`), and chunk-level span tracing (`trace`).
+
+`events` is jax-aware (the ring rides the scan carry); `metrics` and
+`trace` are stdlib/numpy-only so importing them can never perturb
+tracing or compilation caches.
+"""
+from repro.obs import events, metrics, trace  # noqa: F401
+from repro.obs.events import (Event, EventLog, decode_grid,  # noqa: F401
+                              decode_ring, ring_append, ring_init)
+from repro.obs.metrics import MetricsRegistry, get_registry  # noqa: F401
+from repro.obs.trace import Tracer, get_tracer  # noqa: F401
+
+__all__ = ["events", "metrics", "trace", "Event", "EventLog",
+           "decode_ring", "decode_grid", "ring_init", "ring_append",
+           "MetricsRegistry", "get_registry", "Tracer", "get_tracer"]

@@ -1,0 +1,218 @@
+"""In-scan flight recorder: a fixed-width event ring riding the scan carry.
+
+The engine (`repro.core.sim.engine_step`) cannot surface *when* things
+happened — guard escalations, detector alarms, phase flips — because the
+whole run lives inside one jitted ``lax.scan``.  The recorder closes
+that gap with a packed f32 vector that travels in the carry exactly like
+``RLSState`` / the guard state do:
+
+  ``[total, prev_phase, prev_fault, row0 .. row{N-1}]``
+
+where each row is ``(sim_time, event_code, source_id, p0, p1, p2, p3)``.
+``total`` counts every event ever appended (monotonic); rows are written
+at ``total % capacity`` so overflow evicts oldest-first.  The two
+``prev_*`` header slots carry the last-seen phase index / fault-active
+flag so edge-triggered events (phase flip, fault enter/exit) can be
+detected without widening the engine carry.
+
+Neutrality contract (same discipline as the fault axis): the ring is an
+``Optional`` carry field that is ``None`` when recording is off, so it
+contributes **no pytree leaves** — recorder-off runs reuse the exact
+pre-recorder compiled graph and are bit-for-bit the current engine.
+
+Host side, ``decode_ring`` unpacks the vector into typed ``Event``
+records (oldest surviving first); ``EventLog`` is the eager host-path
+twin used by ``ControlPlane`` / ``NRM`` decision streams, with the same
+capacity/oldest-first semantics and a picklable ``state_dict`` so a
+``PlaneSnapshot`` kill/resume carries its incident history.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- layout
+EVENT_WIDTH = 7        # (sim_time, event_code, source_id, payload[4])
+HEADER = 3             # [0]=total appended, [1]=prev phase, [2]=prev fault
+H_TOTAL, H_PREV_PHASE, H_PREV_FAULT = 0, 1, 2
+DEFAULT_MAX_EVENTS = 64
+
+EVENT_NAMES = (
+    "none",
+    "detector_alarm",    # change-point detector fired
+    "guard_hold",        # guard mode crossed into HOLD
+    "guard_failsafe",    # guard mode crossed into FAILSAFE
+    "guard_recover",     # guard mode returned to NORMAL
+    "recovery_reset",    # guard routed an on_change recovery reset
+    "phase_flip",        # workload schedule switched phases
+    "fault_enter",       # any scripted fault window became active
+    "fault_exit",        # all scripted fault windows cleared
+    "quarantine_enter",  # plane: tenant escalated to FAILSAFE
+    "quarantine_exit",   # plane: tenant left FAILSAFE
+    "tenant_added",      # plane: slot allocated
+    "tenant_removed",    # plane: slot freed
+)
+(EV_NONE, EV_DETECTOR_ALARM, EV_GUARD_HOLD, EV_GUARD_FAILSAFE,
+ EV_GUARD_RECOVER, EV_RECOVERY_RESET, EV_PHASE_FLIP, EV_FAULT_ENTER,
+ EV_FAULT_EXIT, EV_QUARANTINE_ENTER, EV_QUARANTINE_EXIT,
+ EV_TENANT_ADDED, EV_TENANT_REMOVED) = range(len(EVENT_NAMES))
+
+SOURCE_NAMES = ("sim", "guard", "detector", "schedule", "faults",
+                "plane", "nrm")
+(SRC_SIM, SRC_GUARD, SRC_DETECTOR, SRC_SCHEDULE, SRC_FAULTS,
+ SRC_PLANE, SRC_NRM) = range(len(SOURCE_NAMES))
+
+_f32 = jnp.float32
+
+
+def ring_dim(max_events: int) -> int:
+    return HEADER + int(max_events) * EVENT_WIDTH
+
+
+def ring_capacity(vec) -> int:
+    """Slot count of a packed ring vector (static: derived from shape)."""
+    return (int(vec.shape[-1]) - HEADER) // EVENT_WIDTH
+
+
+def ring_init(max_events: int) -> jnp.ndarray:
+    """Fresh empty ring. ``prev_phase`` starts at -1 (= unknown, so the
+    first observed phase does not register as a flip)."""
+    if max_events < 1:
+        raise ValueError(f"max_events must be >= 1, got {max_events}")
+    vec = jnp.zeros((ring_dim(max_events),), dtype=_f32)
+    return vec.at[H_PREV_PHASE].set(-1.0)
+
+
+def ring_append(vec: jnp.ndarray, fire, t, code: int, source: int,
+                p0=0.0, p1=0.0, p2=0.0, p3=0.0) -> jnp.ndarray:
+    """Conditionally append one event (trace-safe, vmap/scan-safe).
+
+    When ``fire`` is False the vector is returned bit-unchanged (the
+    masked dynamic-update writes back the existing row).  Oldest-first
+    eviction falls out of writing at ``total % capacity``.
+    """
+    cap = ring_capacity(vec)
+    fire = jnp.asarray(fire)
+    total = vec[H_TOTAL]
+    idx = jnp.mod(total.astype(jnp.int32), cap)
+    row = jnp.stack([jnp.asarray(t, _f32),
+                     jnp.asarray(code, _f32),
+                     jnp.asarray(source, _f32),
+                     jnp.asarray(p0, _f32), jnp.asarray(p1, _f32),
+                     jnp.asarray(p2, _f32), jnp.asarray(p3, _f32)])
+    start = HEADER + idx * EVENT_WIDTH
+    old = jax.lax.dynamic_slice(vec, (start,), (EVENT_WIDTH,))
+    vec = jax.lax.dynamic_update_slice(
+        vec, jnp.where(fire, row, old), (start,))
+    return vec.at[H_TOTAL].add(fire.astype(_f32))
+
+
+# ------------------------------------------------------------ host decode
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One decoded recorder event (host-side, typed)."""
+    t: float
+    code: int
+    name: str
+    source: int
+    source_name: str
+    payload: Tuple[float, float, float, float]
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"t": self.t, "code": self.code, "name": self.name,
+                "source": self.source, "source_name": self.source_name,
+                "payload": list(self.payload)}
+
+
+def _mk_event(row: np.ndarray) -> Event:
+    code = int(row[1])
+    src = int(row[2])
+    name = EVENT_NAMES[code] if 0 <= code < len(EVENT_NAMES) else f"?{code}"
+    sname = (SOURCE_NAMES[src] if 0 <= src < len(SOURCE_NAMES)
+             else f"?{src}")
+    return Event(t=float(row[0]), code=code, name=name, source=src,
+                 source_name=sname, payload=tuple(float(x) for x in row[3:7]))
+
+
+def ring_total(vec) -> int:
+    """Monotonic count of every event ever appended (survivors + evicted)."""
+    return int(round(float(np.asarray(vec)[..., H_TOTAL])))
+
+
+def decode_ring(vec) -> List[Event]:
+    """Unpack one ring vector into Events, oldest surviving first."""
+    v = np.asarray(vec, dtype=np.float64)
+    if v.ndim != 1:
+        raise ValueError(f"decode_ring wants a 1-d ring, got shape {v.shape}"
+                         " (use decode_grid for vmapped axes)")
+    cap = ring_capacity(v)
+    total = int(round(v[H_TOTAL]))
+    rows = v[HEADER:].reshape(cap, EVENT_WIDTH)
+    n = min(total, cap)
+    start = total % cap if total > cap else 0
+    return [_mk_event(rows[(start + i) % cap]) for i in range(n)]
+
+
+def decode_grid(arr) -> np.ndarray:
+    """Decode a grid of rings (any leading axes) -> object ndarray of
+    ``List[Event]`` with the same leading shape."""
+    a = np.asarray(arr)
+    lead = a.shape[:-1]
+    out = np.empty(lead, dtype=object)
+    for idx in np.ndindex(*lead) if lead else [()]:
+        out[idx] = decode_ring(a[idx])
+    return out if lead else out[()]
+
+
+# ------------------------------------------------------- host event log
+class EventLog:
+    """Eager host-path twin of the in-scan ring (ControlPlane / NRM
+    decision streams): bounded, oldest-first eviction, monotonic total."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._rows: List[Event] = []
+        self.total = 0
+
+    def append(self, t: float, code: int, source: int,
+               payload: Sequence[float] = ()) -> Event:
+        p = tuple(float(x) for x in payload)[:4]
+        p = p + (0.0,) * (4 - len(p))
+        ev = _mk_event(np.array([t, code, source, *p], dtype=np.float64))
+        self._rows.append(ev)
+        if len(self._rows) > self.capacity:
+            del self._rows[:len(self._rows) - self.capacity]
+        self.total += 1
+        return ev
+
+    def events(self) -> List[Event]:
+        return list(self._rows)
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def state_dict(self) -> Dict[str, Any]:
+        return {"capacity": self.capacity, "total": self.total,
+                "rows": [[e.t, e.code, e.source, *e.payload]
+                         for e in self._rows]}
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.capacity = int(d["capacity"])
+        self.total = int(d["total"])
+        self._rows = [_mk_event(np.asarray(r, dtype=np.float64))
+                      for r in d["rows"]]
+
+
+def filter_events(events: Sequence[Event], *,
+                  code: Optional[int] = None,
+                  source: Optional[int] = None) -> List[Event]:
+    return [e for e in events
+            if (code is None or e.code == code)
+            and (source is None or e.source == source)]
