@@ -2,12 +2,18 @@
 + roofline. Prints ``name,us_per_call,derived`` CSV per row.
 
   PYTHONPATH=src python -m benchmarks.run [--full]
+
+``--serve PORT`` exposes the whole pass on a live scrape endpoint
+(`repro.obs.serve`): CI curls ``/metrics`` + ``/healthz`` mid-run and
+validates the scraped payloads. ``--sink DIR`` streams periodic registry
+samples (with per-counter deltas) to size-rotated JSONL in DIR.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import traceback
+from pathlib import Path
 
 
 def main() -> None:
@@ -22,9 +28,26 @@ def main() -> None:
     p.add_argument("--quick", action="store_true",
                    help="explicit quick mode (the default; what CI runs)")
     p.add_argument("--only", default=None)
+    p.add_argument("--serve", type=int, default=None, metavar="PORT",
+                   help="expose /metrics /metrics.json /events /healthz "
+                        "on this port for the duration of the run "
+                        "(0 = any free port)")
+    p.add_argument("--sink", default=None, metavar="DIR",
+                   help="stream periodic metric samples to "
+                        "DIR/metrics_samples.jsonl (size-rotated)")
     args = p.parse_args()
     if args.full and args.quick:
         p.error("--full and --quick are mutually exclusive")
+
+    srv = sampler = sink = None
+    if args.serve is not None:
+        from repro.obs import serve as obs_serve
+        srv = obs_serve.start_server(port=args.serve)
+    if args.sink is not None:
+        from repro.obs import sink as obs_sink
+        sink = obs_sink.JsonlSink(
+            Path(args.sink) / "metrics_samples.jsonl")
+        sampler = obs_sink.MetricsSampler(sink, period_s=5.0).start()
 
     from benchmarks import (beyond_adaptive, fig3_system_analysis,
                             fig4_static, fig5_dynamics, fig6_control,
@@ -56,20 +79,34 @@ def main() -> None:
     failed = False
     executed = set()
     print("name,us_per_call,derived")
-    for key, mod in modules.items():
-        if args.only and key != args.only:
-            continue
-        if not args.only and key in opt_in:
-            print(f"{key}/skipped,0,opt-in (run with --only {key})")
-            continue
-        try:
-            for name, us, derived in mod.run(quick=not args.full):
-                print(f"{name},{us:.1f},{derived}")
-            executed.add(key)
-        except Exception:
-            failed = True
-            traceback.print_exc()
-            print(f"{key}/FAILED,0,error")
+    if srv is not None:
+        print(f"obs/serve,0,{srv.url}", flush=True)
+    if sink is not None:
+        print(f"obs/sink,0,{sink.path}", flush=True)
+    try:
+        for key, mod in modules.items():
+            if args.only and key != args.only:
+                continue
+            if not args.only and key in opt_in:
+                print(f"{key}/skipped,0,opt-in (run with --only {key})")
+                continue
+            try:
+                for name, us, derived in mod.run(quick=not args.full):
+                    print(f"{name},{us:.1f},{derived}")
+                executed.add(key)
+            except Exception:
+                failed = True
+                traceback.print_exc()
+                print(f"{key}/FAILED,0,error")
+    finally:
+        # final sample + clean shutdown even when a module blew up
+        if sampler is not None:
+            sampler.stop()
+            sink.close()
+            print(f"obs/sink_rows,0,{sink.written}rows"
+                  f";{sink.rotations}rotations")
+        if srv is not None:
+            srv.stop()
     # the telemetry append is what CI archives: skipping it silently
     # would fork the perf trajectory, so a full run that did not append
     # (telemetry.run also self-verifies the written file) FAILS loudly

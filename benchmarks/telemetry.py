@@ -370,10 +370,18 @@ def run(quick: bool = True):
     tracer = obs_trace.get_tracer()
     tracer.clear()
     obs_trace.enable(True)
+    t_pass = time.perf_counter()
     try:
         data = collect(quick)
     finally:
         obs_trace.enable(False)
+    # total collection wall time flows through the registry like every
+    # other headline (published BEFORE the snapshot below, read back out
+    # of it for the history row — no ad-hoc timer value lands in JSON)
+    obs_metrics.get_registry().gauge(
+        "bench_runtime_seconds",
+        "wall-clock seconds of the full telemetry collection pass"
+    ).set(round(time.perf_counter() - t_pass, 3))
     fresh = data["entries"]
     for name, e in fresh.items():
         _publish_entry(name, e)
@@ -393,11 +401,19 @@ def run(quick: bool = True):
     # metrics say
     snap = obs_metrics.get_registry().snapshot()
     warm_from_snap = _entry_fields_from_snapshot(snap, "warm_s")
+    rps_from_snap = _entry_fields_from_snapshot(snap, "runs_per_sec")
+    runtime_s = next(
+        (s["value"] for s in snap["metrics"]
+         ["bench_runtime_seconds"]["samples"]), 0.0) \
+        if "bench_runtime_seconds" in snap.get("metrics", {}) else 0.0
     row = {"rev": rev,
            "date": datetime.datetime.now(datetime.timezone.utc)
            .strftime("%Y-%m-%dT%H:%M:%SZ"),
            "quick": quick,
-           "warm_s": {k: warm_from_snap[k] for k in fresh}}
+           "runtime_s": runtime_s,
+           "warm_s": {k: warm_from_snap[k] for k in fresh},
+           "runs_per_sec": {k: rps_from_snap[k] for k in fresh
+                            if k in rps_from_snap}}
     # keep extra fields other modules set on this commit's row via
     # merge_history_value (chaos_guard_gain): the snapshot refreshes its
     # own keys without clobbering theirs

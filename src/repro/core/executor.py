@@ -175,8 +175,11 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
     (``stop_after=`` cut the call short — pass the state back in to
     continue across the chunk boundary).
 
-    Observability: chunk/run/resume counters and a runs-per-second
-    gauge publish into the process metrics registry, and when the span
+    Observability: chunk/run/resume counters, live progress gauges
+    (``executor_grid_chunks_done`` / ``_planned``) and a runs-per-second
+    gauge publish into the process metrics registry after EVERY chunk —
+    a `repro.obs.serve` scrape endpoint watches a campaign advance
+    mid-call — and when the span
     tracer is enabled (`repro.obs.trace.enable()`) every chunk emits
     prepare/compute/transfer/merge spans with device ids — the first
     chunk of a freshly wrapped engine is marked ``cold`` (its compute
@@ -213,6 +216,20 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
     wrapped = _compiled(fn, len(shared), devs, donate, wrap)
     dev_ids = [d.id for d in (devs or jax.local_devices()[:1])]
     leaves, treedef = jax.tree_util.tree_flatten(batched)
+    # metrics publish PER CHUNK (not once post-loop) so a scrape
+    # endpoint sees live campaign progress; end-of-call counter totals
+    # are identical to the old single publication
+    c_chunks = reg.counter("executor_chunks_total", "grid chunks executed")
+    c_runs = reg.counter("executor_runs_total", "grid runs executed")
+    g_rate = reg.gauge("executor_last_runs_per_sec",
+                       "throughput of the most recent run_grid call")
+    g_plan = reg.gauge("executor_grid_chunks_planned",
+                       "chunk count of the current run_grid call")
+    g_done = reg.gauge("executor_grid_chunks_done",
+                       "chunks completed (incl. resumed) of the current "
+                       "run_grid call")
+    g_plan.set(n_chunks)
+    g_done.set(int(state.done.sum()))
     ran = 0
     runs_done = 0
     t0 = time.perf_counter()
@@ -274,16 +291,12 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
             state.done[ci] = True
             ran += 1
             runs_done += hi - lo
-    if ran:
-        reg.counter("executor_chunks_total",
-                    "grid chunks executed").inc(ran)
-        reg.counter("executor_runs_total",
-                    "grid runs executed").inc(runs_done)
-        elapsed = time.perf_counter() - t0
-        if elapsed > 0:
-            reg.gauge("executor_last_runs_per_sec",
-                      "throughput of the most recent run_grid call"
-                      ).set(runs_done / elapsed)
+            c_chunks.inc()
+            c_runs.inc(hi - lo)
+            g_done.set(int(state.done.sum()))
+            elapsed = time.perf_counter() - t0
+            if elapsed > 0:
+                g_rate.set(runs_done / elapsed)
     if stopped:
         return None, state
     merged = state.buffers if (consume is None and state.complete) \

@@ -477,6 +477,18 @@ class NRM:
             return []
         return evt.decode_ring(self._event_state)
 
+    def serve(self, port: int = 0, host: str = "127.0.0.1"):
+        """Start a `repro.obs.serve.ObsServer` (daemon thread) exposing
+        this NRM mid-run: ``/events?log=nrm`` tails the host decision
+        log, ``/events?log=flight`` the decoded in-scan flight recorder
+        (refreshed per request), ``/metrics`` the process registry a
+        `run_simulated` loop publishes into. Returns the running server
+        (``.url``, ``.stop()``)."""
+        from repro.obs import serve as obs_serve
+        return obs_serve.start_server(
+            port=port, host=host,
+            event_sources={"nrm": self.events, "flight": self.flight_events})
+
     def _run_simulated_python(self, total_work: float,
                               max_time: float = 3600.0,
                               seed: int = 0) -> Dict[str, np.ndarray]:

@@ -715,6 +715,16 @@ class ControlPlane:
             & (self._guard_on > 0.5) & self._alive
         return [tid for tid, s in self._slots.items() if mask[s]]
 
+    def serve(self, port: int = 0, host: str = "127.0.0.1"):
+        """Start a `repro.obs.serve.ObsServer` (daemon thread) with this
+        plane's decision stream attached: ``/metrics`` exposes the
+        process registry the plane publishes into, ``/events?log=plane``
+        tails its EventLog. Returns the running server (``.url``,
+        ``.stop()``); serving never touches the tick path."""
+        from repro.obs import serve as obs_serve
+        return obs_serve.start_server(
+            port=port, host=host, event_sources={"plane": self.events})
+
     # ---- persistence ------------------------------------------------------
     def snapshot(self) -> PlaneSnapshot:
         """Picklable whole-plane state; `restore` round-trips it across

@@ -49,7 +49,18 @@ def main(argv=None) -> dict:
     p.add_argument("--plant", default="v5e-chip")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--quiet", action="store_true")
+    p.add_argument("--obs-port", type=int, default=None,
+                   help="expose a live scrape endpoint (repro.obs.serve) "
+                        "on this port for the duration of the decode "
+                        "loop: /metrics, /metrics.json, /events, /healthz")
     args = p.parse_args(argv)
+
+    obs_srv = None
+    if args.obs_port is not None:
+        from repro.obs import serve as obs_serve
+        obs_srv = obs_serve.start_server(port=args.obs_port)
+        if not args.quiet:
+            print(f"obs: serving {obs_srv.url}/metrics")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -103,6 +114,8 @@ def main(argv=None) -> dict:
         nrm = NRM(PowerControlConfig(epsilon=args.epsilon,
                                      plant_profile=args.plant,
                                      sampling_period=0.05))
+        if obs_srv is not None:
+            obs_srv.add_event_source("nrm", nrm.events)
     profile = nrm.profile if nrm else None
 
     tokens_out = []
@@ -155,6 +168,8 @@ def main(argv=None) -> dict:
                 plane = ControlPlane(profile=profile,
                                      epsilon=args.epsilon, dt=0.05)
                 plane.add_tenant("serve")
+                if obs_srv is not None:
+                    obs_srv.add_event_source("plane", plane.events)
                 last_ctrl = 0.0
             frac = float(profile.static_progress(
                 actuator._pcap)) / profile.progress_max
@@ -183,6 +198,9 @@ def main(argv=None) -> dict:
                        else round(actuator._pcap, 1) if actuator
                        else None),
     }
+    if obs_srv is not None:
+        result["obs_url"] = obs_srv.url
+        obs_srv.stop()
     if not args.quiet:
         print(result)
     return result

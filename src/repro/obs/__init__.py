@@ -1,16 +1,26 @@
 """Observability layer: in-scan flight recorder (`events`), process-wide
-metrics registry (`metrics`), and chunk-level span tracing (`trace`).
+metrics registry (`metrics`), chunk-level span tracing (`trace`), the
+live scrape endpoint (`serve`) and streaming JSONL sinks (`sink`).
 
-`events` is jax-aware (the ring rides the scan carry); `metrics` and
-`trace` are stdlib/numpy-only so importing them can never perturb
-tracing or compilation caches.
+`events` is jax-aware (the ring rides the scan carry); `metrics`,
+`trace`, `serve` and `sink` are stdlib/numpy-only so importing them can
+never perturb tracing or compilation caches. The perf-regression gate
+(`repro.obs.regress`) is NOT imported here: it pulls in the engine's
+detector from ``repro.core`` and would close an import cycle
+(``repro.core.executor`` imports this package) — run it as
+``python -m repro.obs.regress`` or import it explicitly.
 """
-from repro.obs import events, metrics, trace  # noqa: F401
+from repro.obs import events, metrics, serve, sink, trace  # noqa: F401
 from repro.obs.events import (Event, EventLog, decode_grid,  # noqa: F401
                               decode_ring, ring_append, ring_init)
 from repro.obs.metrics import MetricsRegistry, get_registry  # noqa: F401
+from repro.obs.serve import ObsServer, start_server  # noqa: F401
+from repro.obs.sink import (JsonlSink, MetricsSampler,  # noqa: F401
+                            decision_consumer, read_jsonl)
 from repro.obs.trace import Tracer, get_tracer  # noqa: F401
 
-__all__ = ["events", "metrics", "trace", "Event", "EventLog",
-           "decode_ring", "decode_grid", "ring_init", "ring_append",
-           "MetricsRegistry", "get_registry", "Tracer", "get_tracer"]
+__all__ = ["events", "metrics", "trace", "serve", "sink", "Event",
+           "EventLog", "decode_ring", "decode_grid", "ring_init",
+           "ring_append", "MetricsRegistry", "get_registry", "Tracer",
+           "get_tracer", "ObsServer", "start_server", "JsonlSink",
+           "MetricsSampler", "decision_consumer", "read_jsonl"]

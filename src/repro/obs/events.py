@@ -172,14 +172,30 @@ def decode_grid(arr) -> np.ndarray:
 # ------------------------------------------------------- host event log
 class EventLog:
     """Eager host-path twin of the in-scan ring (ControlPlane / NRM
-    decision streams): bounded, oldest-first eviction, monotonic total."""
+    decision streams): bounded, oldest-first eviction, monotonic total.
 
-    def __init__(self, capacity: int = 256):
+    ``capacity`` is the maxlen bound (mirroring the ring contract):
+    appends beyond it evict oldest-first and increment ``dropped``, so a
+    week-long NRM run can never grow host memory without bound while the
+    drop count records exactly how much history fell off. Attach a
+    ``sink`` (a `repro.obs.sink.JsonlSink`, anything with ``write(dict)``
+    or a plain callable) to stream EVERY appended event to disk before
+    eviction — bounded memory, unbounded durable record. Sink failures
+    are counted (``sink_errors``), never raised: observability must not
+    take down the control path."""
+
+    def __init__(self, capacity: int = 256, sink: Optional[Any] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self._rows: List[Event] = []
         self.total = 0
+        self.dropped = 0
+        self.sink_errors = 0
+        self._sink = sink
+
+    def set_sink(self, sink: Optional[Any]) -> None:
+        self._sink = sink
 
     def append(self, t: float, code: int, source: int,
                payload: Sequence[float] = ()) -> Event:
@@ -187,9 +203,17 @@ class EventLog:
         p = p + (0.0,) * (4 - len(p))
         ev = _mk_event(np.array([t, code, source, *p], dtype=np.float64))
         self._rows.append(ev)
-        if len(self._rows) > self.capacity:
-            del self._rows[:len(self._rows) - self.capacity]
+        over = len(self._rows) - self.capacity
+        if over > 0:
+            del self._rows[:over]
+            self.dropped += over
         self.total += 1
+        if self._sink is not None:
+            try:
+                write = getattr(self._sink, "write", self._sink)
+                write(ev.as_dict())
+            except Exception:
+                self.sink_errors += 1
         return ev
 
     def events(self) -> List[Event]:
@@ -200,12 +224,16 @@ class EventLog:
 
     def state_dict(self) -> Dict[str, Any]:
         return {"capacity": self.capacity, "total": self.total,
+                "dropped": self.dropped,
                 "rows": [[e.t, e.code, e.source, *e.payload]
                          for e in self._rows]}
 
     def load_state_dict(self, d: Dict[str, Any]) -> None:
         self.capacity = int(d["capacity"])
         self.total = int(d["total"])
+        # pre-drop-counter snapshots: the evicted count is derivable
+        self.dropped = int(d.get("dropped",
+                                 max(0, int(d["total"]) - len(d["rows"]))))
         self._rows = [_mk_event(np.asarray(r, dtype=np.float64))
                       for r in d["rows"]]
 

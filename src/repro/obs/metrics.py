@@ -13,10 +13,21 @@ Exposition:
   * ``snapshot()``  -> JSON-able dict (schema versioned; see
     ``validate_snapshot`` — CI fails on malformed exports)
   * ``to_prometheus()`` -> text format for scrape endpoints / promtool
+    (= ``render_prometheus(snapshot())``, so a snapshot FILE renders the
+    same text a live registry would — the ``repro.obs.serve`` CLI serves
+    exported snapshots through the identical code path)
+
+Prometheus conformance (exposition format): counters expose a
+``_total``-suffixed sample name (appended when the registry name lacks
+it), histograms always emit the ``le="+Inf"`` bucket, and HELP text /
+label values are escaped (backslash, newline, quote).
+``validate_prometheus_text`` checks exactly these invariants so CI
+catches exposition drift when it scrapes a live server.
 """
 from __future__ import annotations
 
 import json
+import re
 import threading
 import time
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -204,31 +215,46 @@ class MetricsRegistry:
         return snap
 
     def to_prometheus(self) -> str:
-        lines: List[str] = []
-        with self._lock:
-            for name, m in sorted(self._metrics.items()):
-                if m.help:
-                    lines.append(f"# HELP {name} {m.help}")
-                lines.append(f"# TYPE {name} {m.kind}")
-                for s in m._sample_dicts():
-                    if m.kind == "histogram":
-                        cum = 0
-                        for b, c in zip(s["buckets"], s["counts"]):
-                            cum += c
-                            lines.append(_prom_line(
-                                f"{name}_bucket",
-                                dict(s["labels"], le=_fmt(b)), cum))
-                        lines.append(_prom_line(
-                            f"{name}_bucket", dict(s["labels"], le="+Inf"),
-                            s["count"]))
-                        lines.append(_prom_line(f"{name}_sum", s["labels"],
-                                                s["sum"]))
-                        lines.append(_prom_line(f"{name}_count", s["labels"],
-                                                s["count"]))
-                    else:
-                        lines.append(_prom_line(name, s["labels"],
-                                                s["value"]))
-        return "\n".join(lines) + "\n"
+        return render_prometheus(self.snapshot())
+
+
+def exposition_name(name: str, kind: str) -> str:
+    """Prometheus sample name for a registry metric: counters get the
+    conventional ``_total`` suffix appended unless already present."""
+    if kind == "counter" and not name.endswith("_total"):
+        return name + "_total"
+    return name
+
+
+def render_prometheus(snap: Dict[str, Any]) -> str:
+    """Render a registry snapshot dict as Prometheus exposition text —
+    the one renderer behind both ``MetricsRegistry.to_prometheus()`` and
+    file-backed serving (``repro.obs.serve --metrics FILE``)."""
+    lines: List[str] = []
+    for name, m in sorted(snap.get("metrics", {}).items()):
+        kind = m["type"]
+        ename = exposition_name(name, kind)
+        if m.get("help"):
+            lines.append(f"# HELP {ename} {_esc_help(m['help'])}")
+        lines.append(f"# TYPE {ename} {kind}")
+        for s in m["samples"]:
+            if kind == "histogram":
+                cum = 0
+                for b, c in zip(s["buckets"], s["counts"]):
+                    cum += c
+                    lines.append(_prom_line(
+                        f"{ename}_bucket",
+                        dict(s["labels"], le=_fmt(b)), cum))
+                lines.append(_prom_line(
+                    f"{ename}_bucket", dict(s["labels"], le="+Inf"),
+                    s["count"]))
+                lines.append(_prom_line(f"{ename}_sum", s["labels"],
+                                        s["sum"]))
+                lines.append(_prom_line(f"{ename}_count", s["labels"],
+                                        s["count"]))
+            else:
+                lines.append(_prom_line(ename, s["labels"], s["value"]))
+    return "\n".join(lines) + "\n"
 
 
 def _fmt(v: float) -> str:
@@ -236,9 +262,19 @@ def _fmt(v: float) -> str:
     return s[:-2] if s.endswith(".0") else s
 
 
+def _esc_help(s: str) -> str:
+    return str(s).replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _esc_label(s: str) -> str:
+    return (str(s).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _prom_line(name: str, labels: Dict[str, str], value) -> str:
     if labels:
-        body = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+        body = ",".join(f'{k}="{_esc_label(v)}"'
+                        for k, v in sorted(labels.items()))
         return f"{name}{{{body}}} {_fmt(float(value))}"
     return f"{name} {_fmt(float(value))}"
 
@@ -288,6 +324,106 @@ def validate_snapshot(snap: Any) -> None:
             elif not isinstance(s.get("value"), (int, float)):
                 raise ValueError(f"metric {name!r}: sample value must be "
                                  "numeric")
+
+
+_LABEL_PAIR = r'[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\.)*"'
+_SAMPLE_RE = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+'
+    r'(-?(?:[0-9.]+(?:[eE][+-]?[0-9]+)?)|[+-]Inf|NaN)$')
+_LABELS_RE = re.compile(_LABEL_PAIR)
+_LABEL_BODY_RE = re.compile(rf'{_LABEL_PAIR}(?:,{_LABEL_PAIR})*')
+
+
+def validate_prometheus_text(text: str) -> int:
+    """Raise ValueError unless ``text`` is well-formed Prometheus
+    exposition output honoring the registry's conformance contract:
+    parseable sample lines with properly quoted/escaped label values,
+    a TYPE declaration for every sample family, counter samples named
+    ``*_total``, and histograms whose ``le="+Inf"`` bucket is present
+    and equal to the family's ``_count``, with cumulative bucket counts
+    non-decreasing in ``le``. Returns the number of sample lines."""
+    types: Dict[str, str] = {}
+    samples: List[Tuple[str, Dict[str, str], float]] = []
+    for n, line in enumerate(str(text).splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or parts[3] not in (
+                    "counter", "gauge", "histogram", "summary", "untyped"):
+                raise ValueError(f"line {n}: malformed TYPE line {line!r}")
+            if parts[2] in types:
+                raise ValueError(f"line {n}: duplicate TYPE for "
+                                 f"{parts[2]!r}")
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # HELP / comment (single-line by construction)
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {n}: unparseable sample line {line!r}")
+        name, body, val = m.group(1), m.group(2), m.group(3)
+        if body:
+            if not _LABEL_BODY_RE.fullmatch(body):
+                raise ValueError(f"line {n}: malformed label body in "
+                                 f"{line!r} (unescaped quote/newline?)")
+            labels = dict((k, v) for k, v in
+                          ((p.split("=", 1)[0],
+                            p.split("=", 1)[1][1:-1])
+                           for p in _LABELS_RE.findall(body)))
+        else:
+            labels = {}
+        samples.append((name, labels,
+                        float(val.replace("Inf", "inf"))))
+
+    def family_of(name: str) -> Optional[str]:
+        if name in types:
+            return name
+        for suf in ("_bucket", "_sum", "_count"):
+            base = name[:-len(suf)] if name.endswith(suf) else None
+            if base and types.get(base) in ("histogram", "summary"):
+                return base
+        return None
+
+    for name, labels, _ in samples:
+        fam = family_of(name)
+        if fam is None:
+            raise ValueError(f"sample {name!r} has no TYPE declaration")
+        if types[fam] == "counter" and not name.endswith("_total"):
+            raise ValueError(f"counter sample {name!r} must be exposed "
+                             "with the _total suffix")
+    for fam, kind in types.items():
+        if kind != "histogram":
+            continue
+        groups: Dict[Tuple, List[Tuple[float, float]]] = {}
+        counts: Dict[Tuple, float] = {}
+        for name, labels, val in samples:
+            key = tuple(sorted((k, v) for k, v in labels.items()
+                               if k != "le"))
+            if name == fam + "_bucket":
+                le = labels.get("le")
+                if le is None:
+                    raise ValueError(f"histogram {fam!r}: bucket sample "
+                                     "without le label")
+                groups.setdefault(key, []).append(
+                    (float(le.replace("Inf", "inf")), val))
+            elif name == fam + "_count":
+                counts[key] = val
+        if not groups:
+            continue  # a histogram family with no samples yet is fine
+        for key, buckets in groups.items():
+            les = [b[0] for b in buckets]
+            if float("inf") not in les:
+                raise ValueError(f'histogram {fam!r}: missing le="+Inf" '
+                                 f"bucket for labels {dict(key)}")
+            ordered = [v for _, v in sorted(buckets)]
+            if any(b > a for a, b in zip(ordered[1:], ordered)):
+                raise ValueError(f"histogram {fam!r}: bucket counts not "
+                                 f"cumulative for labels {dict(key)}")
+            if key in counts and ordered[-1] != counts[key]:
+                raise ValueError(f"histogram {fam!r}: le=+Inf bucket != "
+                                 f"_count for labels {dict(key)}")
+    return len(samples)
 
 
 # --------------------------------------------------------------- default

@@ -1,11 +1,15 @@
 """Schema validation CLI for observability exports (CI gate).
 
   PYTHONPATH=src python -m repro.obs.validate \
-      --metrics BENCH_metrics.json --trace BENCH_trace.json
+      --metrics BENCH_metrics.json --trace BENCH_trace.json \
+      --prom scraped_metrics.txt
 
 Exits non-zero (failing the CI job) when an export is missing or
 malformed, so a quick-benchmark run can never silently upload a broken
-snapshot/trace artifact.
+snapshot/trace artifact. ``--prom`` checks Prometheus exposition text
+(e.g. a live scrape of ``/metrics``) for format conformance: counter
+``_total`` suffixes, the ``le="+Inf"`` bucket, cumulative histogram
+buckets and label escaping.
 """
 from __future__ import annotations
 
@@ -34,9 +38,13 @@ def main(argv=None) -> int:
     p.add_argument("--trace", default=None,
                    help="chrome trace-event JSON to validate "
                         "(must contain >= 1 span)")
+    p.add_argument("--prom", default=None,
+                   help="Prometheus exposition text file to validate "
+                        "(a scraped /metrics payload)")
     args = p.parse_args(argv)
-    if not args.metrics and not args.trace:
-        p.error("nothing to validate: pass --metrics and/or --trace")
+    if not args.metrics and not args.trace and not args.prom:
+        p.error("nothing to validate: pass --metrics, --trace "
+                "and/or --prom")
     try:
         if args.metrics:
             _metrics.validate_snapshot(_load(args.metrics))
@@ -47,6 +55,15 @@ def main(argv=None) -> int:
             _trace.validate_chrome_trace(doc, require_spans=True)
             print(f"OK {args.trace}: valid chrome trace "
                   f"({len(doc['traceEvents'])} events)")
+        if args.prom:
+            try:
+                with open(args.prom) as fh:
+                    text = fh.read()
+            except FileNotFoundError:
+                raise ValueError(f"{args.prom}: file not found")
+            n = _metrics.validate_prometheus_text(text)
+            print(f"OK {args.prom}: valid Prometheus exposition "
+                  f"({n} samples)")
     except ValueError as e:
         print(f"INVALID: {e}", file=sys.stderr)
         return 1
