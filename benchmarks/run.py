@@ -49,11 +49,11 @@ def main() -> None:
             Path(args.sink) / "metrics_samples.jsonl")
         sampler = obs_sink.MetricsSampler(sink, period_s=5.0).start()
 
-    from benchmarks import (beyond_adaptive, fig3_system_analysis,
-                            fig4_static, fig5_dynamics, fig6_control,
-                            fig7_pareto, fig8_phases, fig9_chaos,
-                            plane_load, policy_faceoff, roofline,
-                            telemetry)
+    from benchmarks import (beyond_adaptive, campaign_soak,
+                            fig3_system_analysis, fig4_static,
+                            fig5_dynamics, fig6_control, fig7_pareto,
+                            fig8_phases, fig9_chaos, plane_load,
+                            policy_faceoff, roofline, telemetry)
     modules = {
         "fig3": fig3_system_analysis,
         "fig4": fig4_static,
@@ -66,13 +66,14 @@ def main() -> None:
         "roofline": roofline,
         "plane": plane_load,
         "chaos": fig9_chaos,
+        "soak": campaign_soak,
         # last: times the flagship engine workloads and writes the
         # machine-readable BENCH_sim.json perf record at the repo root
         "telemetry": telemetry,
     }
     # heavyweight fixed-horizon grids that only run when asked for by
     # name (CI runs them as their own step before the quick pass)
-    opt_in = {"chaos"}
+    opt_in = {"chaos", "soak"}
     if args.only and args.only not in modules:
         p.error(f"--only {args.only!r}: unknown module; choose from "
                 f"{sorted(modules)}")

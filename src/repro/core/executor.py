@@ -162,7 +162,8 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
              donate: bool = True, wrap: str = "jit",
              consume: Optional[Callable] = None,
              state: Optional[ExecState] = None,
-             stop_after: Optional[int] = None
+             stop_after: Optional[int] = None,
+             grid_digest: Optional[str] = None
              ) -> Tuple[Any, ExecState]:
     """Drive ``fn(batched_chunk, *shared)`` over a flat run list.
 
@@ -194,8 +195,10 @@ def run_grid(fn: Callable, batched: Any, shared: Tuple, n_runs: int, *,
     if state is not None or stop_after is not None:
         # resumable flows guard CONTENT, not just shape: a same-shape
         # grid with different parameters must not merge into a
-        # half-finished state's buffers
-        fingerprint += ":" + _digest(batched, shared)
+        # half-finished state's buffers. grid_digest= lets a caller that
+        # already hashed the grid (the campaign supervisor drives this
+        # loop one chunk per call) skip re-digesting it every call.
+        fingerprint += ":" + (grid_digest or _digest(batched, shared))
 
     reg = obs_metrics.get_registry()
     tracer = obs_trace.get_tracer()

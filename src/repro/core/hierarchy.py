@@ -363,16 +363,29 @@ def fleet_sweep(profile, fc: FleetConfig, steps: int,
                                  Sequence[Optional[PhaseSchedule]]]
                 = None,
                 chunk_size: Optional[int] = None,
-                devices=None) -> dict:
+                devices=None, durable=None, campaign=None) -> dict:
     """Multi-seed fleet campaign on the chunked/sharded executor: the
     `simulate_fleet` engine vmapped over independent seed realizations,
     cut into ``chunk_size`` tiles and spread over ``devices`` like any
     `sweep` grid (`repro.core.executor`), so 30-rep fleet evaluations at
     1024 nodes no longer need one giant batch (or one device). Returns
     `simulate_fleet`'s traces dict with a leading seed axis on every
-    per-step series and per-run reduction."""
+    per-step series and per-run reduction.
+
+    ``durable=dir`` journals the campaign through
+    `repro.core.supervisor` (write-ahead chunk journal, retry/backoff,
+    device quarantine); `supervisor.resume_campaign(dir)` reopens it
+    after a crash and returns the identical traces dict. ``campaign=``
+    tunes the `supervisor.CampaignConfig` ladder."""
     from repro.core import executor
 
+    if durable is not None:
+        from repro.core import supervisor
+        supervisor.save_campaign_spec(durable, "fleet_sweep", dict(
+            profile=profile, fc=fc, steps=steps, seeds=list(seeds),
+            node_class=(None if node_class is None else list(node_class)),
+            policies=policies, schedules=schedules,
+            chunk_size=chunk_size, devices=devices, campaign=campaign))
     profs, cls, branches, args = _fleet_args(profile, fc, node_class,
                                              policies, schedules)
     scan_len = sim._bucket_steps(steps)
@@ -384,9 +397,15 @@ def fleet_sweep(profile, fc: FleetConfig, steps: int,
                      jnp.float32(steps), jnp.float32(fc.dt))
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s)))
                      for s in seeds])
-    merged, _ = executor.run_grid(fn, {"key": keys}, shared, len(seeds),
-                                  chunk_size=chunk_size,
-                                  devices=devices)
+    if durable is not None:
+        from repro.core import supervisor
+        merged, _report = supervisor.run_durable(
+            fn, {"key": keys}, shared, len(seeds), dir=durable,
+            chunk_size=chunk_size, devices=devices, config=campaign)
+    else:
+        merged, _ = executor.run_grid(fn, {"key": keys}, shared,
+                                      len(seeds), chunk_size=chunk_size,
+                                      devices=devices)
     out = {k: (v[:, :steps] if getattr(v, "ndim", 0) >= 2
                and v.shape[1] == scan_len else v)
            for k, v in merged.items()}

@@ -98,7 +98,8 @@ class NRM:
                  profile: Optional[PlantProfile] = None,
                  policy=None,
                  detector: Optional[DetectorConfig] = None,
-                 guard: Union[None, bool, flt.GuardConfig] = None):
+                 guard: Union[None, bool, flt.GuardConfig] = None,
+                 reexcite: int = 0, reexcite_frac: float = 0.08):
         self.cfg = pc_cfg
         self.profile = profile or PROFILES[pc_cfg.plant_profile]
         self.actuator = actuator or SimulatedPowerActuator(self.profile)
@@ -141,6 +142,16 @@ class NRM:
         # last cap COMMAND actually applied to the actuator (the
         # detector's model replays it through the design transform)
         self._pcap_applied = float(self.profile.pcap_max)
+        # detector-triggered re-identification (reexcite= windows of
+        # +/- dither after each alarm): the alarm itself routes through
+        # plane_step's branch_on_change (covariance blow + forced
+        # re-placement); these fields drive the runtime excitation half
+        # of the recipe (policies.pi.reexcite_cap). 0 = off (default:
+        # control_step stays bit-for-bit the pre-reexcite loop).
+        self._reexcite_k = int(reexcite)
+        self._reexcite_frac = float(reexcite_frac)
+        self._reexcite_left = 0
+        self._reexcite_i = 0
         if policy is not None and pc_cfg.adaptive:
             raise ValueError("policy= replaces the PI controller; "
                              "adaptive RLS only schedules PI gains")
@@ -297,6 +308,26 @@ class NRM:
         if det_vals is not None:
             self._det_state = det_s
         detected = bool(float(change))
+        reexcited = False
+        if self._reexcite_k:
+            if detected:
+                # arm the probe: plane_step just routed branch_on_change
+                # (covariance blow + forced re-placement); the next
+                # healthy windows get informative caps, not steady state
+                self._reexcite_left = self._reexcite_k
+                self._reexcite_i = 0
+            elif self._reexcite_left > 0:
+                healthy = (np.isfinite(progress) and progress > 0.0
+                           and float(gmode) == 0.0)
+                if healthy:
+                    from repro.core.policies.pi import reexcite_cap
+                    pcap = reexcite_cap(pcap, self._reexcite_i,
+                                        self._reexcite_frac,
+                                        self.profile.pcap_min,
+                                        self.profile.pcap_max)
+                    self._reexcite_i += 1
+                    self._reexcite_left -= 1
+                    reexcited = True
         self.actuator.set_pcap(pcap)
         self._pcap_applied = float(np.clip(pcap, self.profile.pcap_min,
                                            self.profile.pcap_max))
@@ -324,6 +355,12 @@ class NRM:
             self.events.append(self._t, evt.EV_DETECTOR_ALARM,
                                evt.SRC_NRM,
                                (float(progress), self._pcap_applied))
+        if reexcited:
+            reg.counter("nrm_reexcitations_total",
+                        "post-alarm re-excitation dithers applied").inc()
+            self.events.append(self._t, evt.EV_REEXCITE, evt.SRC_NRM,
+                               (float(self._reexcite_i),
+                                self._pcap_applied))
         if gvals is not None:
             gmode_f = float(gmode)
             if gmode_f >= flt.GUARD_HOLD > prev_gmode:
@@ -558,6 +595,9 @@ class NRM:
             d["event_state"] = np.asarray(self._event_state,
                                           np.float32).tolist()
         d["pcap_applied"] = self._pcap_applied
+        # re-excitation probe position IS run state: losing it would
+        # restart (or drop) the post-alarm dither across a kill/resume
+        d["reexcite"] = [self._reexcite_left, self._reexcite_i]
         # the heartbeat ring buffer IS run state: without it, the first
         # post-restore control period sees zero progress and commands a
         # transient the pre-kill run never saw
@@ -602,6 +642,8 @@ class NRM:
                              else np.asarray(es, np.float32))
         self._pcap_applied = float(d.get("pcap_applied",
                                          self.profile.pcap_max))
+        rx = d.get("reexcite", [0, 0])
+        self._reexcite_left, self._reexcite_i = int(rx[0]), int(rx[1])
         hb = d.get("heartbeats")
         if hb is not None:
             self.hb.load_state_dict(hb)

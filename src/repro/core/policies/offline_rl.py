@@ -145,14 +145,23 @@ def harvest_dataset(profiles, epsilons, seeds, *, total_work: float,
                     max_time: float = 3600.0, dt: float = 1.0,
                     tau_obj: float = 10.0, rho: float = 3.0,
                     chunk_size: int = 1024, devices=None,
-                    backend: str = "scan") -> Dict[str, np.ndarray]:
+                    backend: str = "scan", durable=None,
+                    campaign=None) -> Dict[str, np.ndarray]:
     """Bounded-memory transition harvest over a (profiles x epsilons x
     seeds) PI grid: the full-trace sweep streams through the chunked
     executor (`sweep(consume=...)`) and each chunk is converted to
     (s, a, r, s') rows on the fly — only O(chunk * T) trace memory ever
     exists, so paper-scale training sets no longer require the whole
     sweep's traces at once. Row order and values match concatenating
-    `build_dataset` over per-(profile, epsilon) one-shot sweeps."""
+    `build_dataset` over per-(profile, epsilon) one-shot sweeps.
+
+    ``durable=dir`` makes the harvest crash-safe end to end: each
+    chunk's transitions are spooled atomically to
+    ``dir/parts/part_<lo>.npz`` BEFORE the supervisor journal-commits
+    the chunk, so `supervisor.resume_campaign(dir)` recomputes only the
+    uncommitted chunks and reassembles the full dataset from disk —
+    the in-memory accumulation a crash would lose is bypassed
+    entirely."""
     from repro.core import sim  # late: policies must not import sim
 
     profs = [sim._resolve(p) for p in
@@ -169,16 +178,62 @@ def harvest_dataset(profiles, epsilons, seeds, *, total_work: float,
     cap_lo = np.asarray([p.pcap_min for p in profs], np.float32)
     cap_rng = np.asarray([p.pcap_max - p.pcap_min for p in profs],
                          np.float32)
-    parts: Dict[str, list] = {"s": [], "a": [], "r": [], "s2": []}
 
-    def consume(lo, hi, out):
-        traces, _final = out
+    def _chunk_transitions(lo, hi, traces):
         idx = np.arange(lo, hi)
         ip, ie = idx // (E * S), (idx // S) % E
-        d = transitions_from_traces(
+        return transitions_from_traces(
             traces["progress"], traces["pcap"], traces["power"],
             traces["valid"], setp[ip, ie], p_lo[ip], p_hi[ip],
             cap_lo[ip], cap_rng[ip], rho)
+
+    keys = ("s", "a", "r", "s2")
+    if durable is not None:
+        import os
+        from pathlib import Path
+
+        from repro.core import supervisor
+        supervisor.save_campaign_spec(durable, "harvest_dataset", dict(
+            profiles=profiles, epsilons=eps, seeds=list(seeds),
+            total_work=total_work, max_time=max_time, dt=dt,
+            tau_obj=tau_obj, rho=rho, chunk_size=chunk_size,
+            devices=devices, backend=backend, campaign=campaign))
+        part_dir = Path(durable) / "parts"
+        part_dir.mkdir(parents=True, exist_ok=True)
+
+        def consume(lo, hi, out):
+            traces, _final = out
+            d = _chunk_transitions(lo, hi, traces)
+            # atomic spool BEFORE the journal commit: a committed chunk
+            # always has its part on disk; a replayed chunk rewrites the
+            # identical bytes
+            p = part_dir / f"part_{lo:010d}.npz"
+            tmp = p.with_name(p.name + ".tmp")
+            with open(tmp, "wb") as fh:
+                np.savez(fh, **d)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, p)
+
+        sim.sweep(profs, eps, seeds, total_work=total_work,
+                  max_time=max_time, dt=dt, tau_obj=tau_obj,
+                  collect_traces=True, backend=backend,
+                  chunk_size=chunk_size, devices=devices,
+                  consume=consume, durable=durable, campaign=campaign)
+        out: Dict[str, list] = {k: [] for k in keys}
+        for p in sorted(part_dir.glob("part_*.npz")):
+            with np.load(p) as z:
+                for k in keys:
+                    out[k].append(z[k])
+        return {k: np.concatenate(v) if v
+                else np.zeros((0,), np.float32)
+                for k, v in out.items()}
+
+    parts: Dict[str, list] = {k: [] for k in keys}
+
+    def consume(lo, hi, out):
+        traces, _final = out
+        d = _chunk_transitions(lo, hi, traces)
         for k in parts:
             parts[k].append(d[k])
 

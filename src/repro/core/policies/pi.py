@@ -100,6 +100,27 @@ register_branch("pi", _pi_step, _pi_init)
 register_branch("pi_rls", _pi_rls_step, _pi_rls_init, _pi_rls_extras,
                 on_change=_pi_rls_on_change)
 
+# default probe length for the runtime re-identification recipe below
+REEXCITE_K = 4
+
+
+def reexcite_cap(pcap: float, step_i: int, frac: float,
+                 lo: float, hi: float) -> float:
+    """Post-alarm re-excitation: the runtime half of the
+    re-identification recipe whose in-engine half is `_pi_rls_on_change`.
+
+    The on_change hook blows the covariance and forces re-placement, but
+    a freshly-reset estimator staring at steady-state operation learns
+    nothing — the regressor barely moves. For the first few healthy
+    windows after an alarm, alternate the commanded cap +/- ``frac`` of
+    the actuation range (persistent excitation), clipped to the
+    actuator's limits. `NRM.control_step` applies this for
+    ``reexcite=`` windows after each detector alarm."""
+    span = float(frac) * (float(hi) - float(lo))
+    sign = 1.0 if int(step_i) % 2 == 0 else -1.0
+    return float(min(max(float(pcap) + sign * span, float(lo)),
+                     float(hi)))
+
 
 @dataclasses.dataclass(frozen=True)
 class PIPolicy(Policy):

@@ -1169,7 +1169,9 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
                 typed_pi: bool = False,
                 consume=None,
                 state=None,
-                stop_after: Optional[int] = None):
+                stop_after: Optional[int] = None,
+                durable=None,
+                campaign=None):
     """Shared implementation behind `sweep` / `sweep_resumable`:
     normalizes the grid, then runs it one-shot (the legacy exact path)
     or through `repro.core.executor`. Returns (SweepResult | None,
@@ -1299,7 +1301,8 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
     max_steps = _bucket_steps(int(np.ceil(max_time / dt)))
     use_exec = (backend != "scan" or chunk_size is not None
                 or devices is not None or consume is not None
-                or state is not None or stop_after is not None)
+                or state is not None or stop_after is not None
+                or durable is not None)
     exec_state = None
     if not use_exec:
         traces, final = _jit_sweep(max_steps, branches, collect_traces,
@@ -1360,10 +1363,21 @@ def _sweep_impl(profiles: Union[str, PlantProfile,
             if gvl is not None:
                 shared = shared + (gvl,)
             wrap = "jit"
-        merged, exec_state = executor.run_grid(
-            fn, batched, shared, n_runs, chunk_size=chunk_size,
-            devices=devices, wrap=wrap, consume=consume, state=state,
-            stop_after=stop_after)
+        if durable is not None:
+            # journaled, retried, quarantine-capable campaign path —
+            # same grid, same per-run rows, so the merged result is
+            # bit-for-bit the plain run_grid one
+            from repro.core import supervisor
+            merged, report = supervisor.run_durable(
+                fn, batched, shared, n_runs, dir=durable,
+                chunk_size=chunk_size, devices=devices, wrap=wrap,
+                consume=consume, config=campaign)
+            exec_state = report.state
+        else:
+            merged, exec_state = executor.run_grid(
+                fn, batched, shared, n_runs, chunk_size=chunk_size,
+                devices=devices, wrap=wrap, consume=consume, state=state,
+                stop_after=stop_after)
         if merged is None:  # consume hook ran, or stop_after cut short
             return None, exec_state
         traces, final = merged
@@ -1417,7 +1431,8 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
           record_events=None, *,
           backend: str = "scan",
           chunk_size: Optional[int] = None, devices=None,
-          typed_pi: bool = False, consume=None
+          typed_pi: bool = False, consume=None,
+          durable=None, campaign=None
           ) -> Optional[SweepResult]:
     """Vmapped closed-loop grid: profiles x epsilons [x policies]
     [x workloads] x seeds.
@@ -1489,14 +1504,39 @@ def sweep(profiles, epsilons, seeds, total_work, max_time=3600.0,
     ``consume=`` streams per-chunk results to a callback ``consume(lo,
     hi, (traces, final))`` instead of accumulating them (the offline-RL
     dataset harvester) — `sweep` then returns None.
+
+    ``durable=dir`` runs the grid under the campaign supervisor
+    (`repro.core.supervisor`): every chunk is write-ahead journaled and
+    checkpointed into ``dir``, transient failures retry with backoff,
+    failing devices are quarantined, and after ANY crash
+    `supervisor.resume_campaign(dir)` reopens the campaign and returns
+    the bit-for-bit uninterrupted result. ``campaign=`` tunes the
+    `supervisor.CampaignConfig` ladder. The sweep arguments are pickled
+    into ``dir`` as the campaign spec, so pass ``devices=`` as
+    None/int/"all" (picklable forms), not raw device objects.
     """
+    if durable is not None and consume is None:
+        # first writer wins: a resume re-entering through sweep() keeps
+        # the original spec. consume= callbacks are not picklable —
+        # callers owning one (harvest_dataset) save their own spec.
+        from repro.core import supervisor
+        supervisor.save_campaign_spec(durable, "sweep", dict(
+            profiles=profiles, epsilons=list(epsilons),
+            seeds=list(seeds), total_work=total_work, max_time=max_time,
+            dt=dt, tau_obj=tau_obj, adaptive=adaptive, policies=policies,
+            collect_traces=collect_traces, summary_warmup=summary_warmup,
+            workloads=workloads, detector=detector, faults=faults,
+            guard=guard, record_events=record_events, backend=backend,
+            chunk_size=chunk_size, devices=devices, typed_pi=typed_pi,
+            campaign=campaign))
     res, _ = _sweep_impl(profiles, epsilons, seeds, total_work,
                          max_time, dt, tau_obj, adaptive, policies,
                          collect_traces, summary_warmup, workloads,
                          detector, faults, guard, record_events,
                          backend=backend,
                          chunk_size=chunk_size, devices=devices,
-                         typed_pi=typed_pi, consume=consume)
+                         typed_pi=typed_pi, consume=consume,
+                         durable=durable, campaign=campaign)
     return res
 
 

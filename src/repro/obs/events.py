@@ -56,16 +56,26 @@ EVENT_NAMES = (
     "quarantine_exit",   # plane: tenant left FAILSAFE
     "tenant_added",      # plane: slot allocated
     "tenant_removed",    # plane: slot freed
+    # appended codes stay append-only: decoded rings from older
+    # checkpoints keep their numbering
+    "chunk_retry",        # supervisor: chunk attempt failed, backing off
+    "chunk_dead",         # supervisor: chunk dead-lettered
+    "device_quarantine",  # supervisor: device marked suspect
+    "device_reinstate",   # supervisor: quarantined device probed back
+    "campaign_resume",    # supervisor: campaign reopened from journal
+    "reexcite",           # nrm: post-alarm re-excitation dither applied
 )
 (EV_NONE, EV_DETECTOR_ALARM, EV_GUARD_HOLD, EV_GUARD_FAILSAFE,
  EV_GUARD_RECOVER, EV_RECOVERY_RESET, EV_PHASE_FLIP, EV_FAULT_ENTER,
  EV_FAULT_EXIT, EV_QUARANTINE_ENTER, EV_QUARANTINE_EXIT,
- EV_TENANT_ADDED, EV_TENANT_REMOVED) = range(len(EVENT_NAMES))
+ EV_TENANT_ADDED, EV_TENANT_REMOVED, EV_CHUNK_RETRY, EV_CHUNK_DEAD,
+ EV_DEVICE_QUARANTINE, EV_DEVICE_REINSTATE, EV_CAMPAIGN_RESUME,
+ EV_REEXCITE) = range(len(EVENT_NAMES))
 
 SOURCE_NAMES = ("sim", "guard", "detector", "schedule", "faults",
-                "plane", "nrm")
+                "plane", "nrm", "supervisor")
 (SRC_SIM, SRC_GUARD, SRC_DETECTOR, SRC_SCHEDULE, SRC_FAULTS,
- SRC_PLANE, SRC_NRM) = range(len(SOURCE_NAMES))
+ SRC_PLANE, SRC_NRM, SRC_SUPERVISOR) = range(len(SOURCE_NAMES))
 
 _f32 = jnp.float32
 

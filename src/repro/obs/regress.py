@@ -17,13 +17,21 @@ slow EWMA baseline so a gradual drift is absorbed while a step alarms.
 ``sigma`` comes from the series itself (MAD of first differences, with a
 relative floor), so noisy headlines get proportionally wide gates.
 
-CLI (wired into CI as a soft gate):
+CLI (wired into CI as a HARD gate since PR 10):
 
-  PYTHONPATH=src python -m repro.obs.regress BENCH_sim.json --soft
+  PYTHONPATH=src python -m repro.obs.regress BENCH_sim.json
 
 Exit codes: 0 clean (or ``--soft``), 1 regression detected, 2 history
 unreadable. A *change* in the good direction (runs/sec up, warm_s down)
 is reported as an improvement, never gates.
+
+Promotion rule: a headline series participates in the hard gate only
+once it is long enough to clear detector warm-up — `assess` skips any
+series shorter than ``min_gap + 2`` revisions ("too short"), so a
+freshly-added benchmark can never arm the detector, let alone fail CI.
+That makes the hard gate safe by construction: new headlines ride
+along soft until they accumulate history, then graduate automatically.
+Keep ``--soft`` for ad-hoc runs against short or experimental series.
 """
 from __future__ import annotations
 

@@ -482,3 +482,96 @@ def test_guard_quarantine_leaves_other_tenants_bit_identical():
                      [t - 1.0 + (j + 0.5) / 4 for j in range(4)])
     chaos.tick()
     assert chaos.quarantined() == []
+
+
+# ---------------------------------------------------------------------------
+# detector-triggered re-identification (reexcite=) on the runtime path
+# ---------------------------------------------------------------------------
+
+def _reexcite_beats(n_steps, dt=1.0, flip=45):
+    """One shared beat schedule (phase change at `flip`) so every arm
+    sees identical workload input."""
+    rng = np.random.default_rng(3)
+    out, t = [], 0.0
+    for k in range(n_steps):
+        t += dt
+        rate = 40.0 if k < flip else 8.0
+        out.append(_beats(rng, rate, t, dt))
+    return out
+
+
+def _drive_reexcite(reexcite, beats, dt=1.0):
+    nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros",
+                                 adaptive=True),
+              detector=DetectorConfig(threshold=6.0, min_gap=5),
+              reexcite=reexcite)
+    caps, alarms = [], []
+    for bts in beats:
+        for bt in bts:
+            nrm.heartbeat(t=bt)
+        rec = nrm.control_step(dt=dt)
+        caps.append(rec.pcap)
+        alarms.append(rec.phase_change)
+    return nrm, caps, alarms
+
+
+def test_reexcite_probe_vs_covariance_reset_only():
+    """S1 regression: post-alarm healthy windows get the short
+    re-excitation recipe (policies.pi.reexcite_cap) on top of the
+    engine-shared on_change covariance reset — vs the reset-only arm."""
+    from repro.obs import events as evt
+    beats = _reexcite_beats(90)
+    base, caps0, al0 = _drive_reexcite(0, beats)
+    rex, caps1, al1 = _drive_reexcite(4, beats)
+    assert any(al0), "phase change never alarmed"
+    first = al0.index(True)
+    # bit-for-bit until the alarm: reexcite=0-equivalent before arming
+    assert caps1[:first + 1] == caps0[:first + 1]
+    assert al1.index(True) == first
+    # the probe dithered the next healthy windows
+    assert caps1[first + 1:first + 5] != caps0[first + 1:first + 5]
+    probes = [e for e in rex.events.events()
+              if e.code == evt.EV_REEXCITE]
+    # the full budget ran (a later re-alarm may legitimately re-arm)
+    assert len(probes) >= 4
+    assert [int(e.payload[0]) for e in probes[:4]] == [1, 2, 3, 4]
+    assert not [e for e in base.events.events()
+                if e.code == evt.EV_REEXCITE]
+    # excitation means information: the freshly-reset covariance must
+    # contract at least as fast as staring at steady state does
+    tr = lambda n: float(np.trace(np.asarray(n._rls_state.P)))
+    assert tr(rex) <= tr(base) * 1.05
+
+
+def test_reexcite_state_survives_checkpoint_round_trip():
+    """Killing an NRM mid-probe must not restart (or drop) the dither:
+    reexcite position rides state_dict like every other run state."""
+    beats = _reexcite_beats(90)
+    _, _, alarms = _drive_reexcite(4, beats)
+    first = alarms.index(True)
+    cut = first + 2  # mid-probe: 2 of 4 windows consumed
+
+    nrm = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros",
+                                 adaptive=True),
+              detector=DetectorConfig(threshold=6.0, min_gap=5),
+              reexcite=4)
+    caps = []
+    for bts in beats[:cut]:
+        for bt in bts:
+            nrm.heartbeat(t=bt)
+        caps.append(nrm.control_step(dt=1.0).pcap)
+    assert nrm._reexcite_left > 0, "cut landed outside the probe"
+    d = pickle.loads(pickle.dumps(nrm.state_dict()))
+    clone = NRM(PowerControlConfig(epsilon=0.1, plant_profile="gros",
+                                   adaptive=True),
+                detector=DetectorConfig(threshold=6.0, min_gap=5),
+                reexcite=4)
+    clone.load_state_dict(d)
+    assert clone._reexcite_left == nrm._reexcite_left
+    assert clone._reexcite_i == nrm._reexcite_i
+    for bts in beats[cut:]:
+        for bt in bts:
+            nrm.heartbeat(t=bt)
+            clone.heartbeat(t=bt)
+        assert clone.control_step(dt=1.0).pcap \
+            == nrm.control_step(dt=1.0).pcap
